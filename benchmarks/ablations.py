@@ -1,0 +1,78 @@
+"""§V-E and §V-F ablations.
+
+ablation_decode (§V-E): all-thread (vectorized two-phase expansion) vs
+single-thread decoding, both at warp-unit provisioning.  Paper: all-thread
+wins 1.17x (RLE) / 1.19x (deflate) on A100; on the CPU proxy the gap is far
+larger because a scalar while-loop step is the worst case for both.
+
+ablation_unit (§V-F): warp-unit vs block-unit provisioning (both all-thread)
++ a pool-size sweep — the paper's finding that finer decompression units win
+because more independent streams are in flight.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.common import compressed_corpus, geomean, timeit
+from repro.core import format as fmt
+from repro.core.engine import CodagEngine, EngineConfig
+
+CODECS = (fmt.RLE_V1, fmt.RLE_V2, fmt.TDEFLATE)
+DATASETS_SMALL = ("MC0", "TPC", "HRG")   # paper's §V-E uses MC0/TPC
+
+
+def _tp(engine_cfg: EngineConfig, ca) -> float:
+    eng = CodagEngine(engine_cfg)
+    total = 0.0
+    for blob in ca.blobs:
+        dev = {k: jnp.asarray(v) for k, v in blob.to_device().items()}
+
+        def run():
+            return eng.decompress_chunks(dev, codec=blob.codec,
+                                         width=blob.width,
+                                         chunk_elems=blob.chunk_elems)
+
+        total += blob.uncompressed_bytes / timeit(run)
+    return total / len(ca.blobs)
+
+
+def run_decode_ablation(size_mb: float = 0.5):
+    corpus = compressed_corpus(size_mb, CODECS)
+    rows = []
+    for codec in CODECS:
+        sps = []
+        for name in DATASETS_SMALL:
+            ca = corpus[codec][name]
+            tp_all = _tp(EngineConfig(unit="warp", all_thread=True), ca)
+            tp_one = _tp(EngineConfig(unit="warp", all_thread=False), ca)
+            sps.append(tp_all / tp_one)
+            rows.append((f"ablation_decode/{codec}/{name}/allthread_over_single",
+                         tp_all / tp_one, tp_all / 1e6))
+        rows.append((f"ablation_decode/{codec}/geomean",
+                     geomean(sps), geomean(sps)))
+    return rows
+
+
+def run_unit_ablation(size_mb: float = 0.5):
+    corpus = compressed_corpus(size_mb, CODECS)
+    rows = []
+    for codec in CODECS:
+        sps = []
+        for name in DATASETS_SMALL:
+            ca = corpus[codec][name]
+            tp_warp = _tp(EngineConfig(unit="warp", all_thread=True), ca)
+            tp_block = _tp(EngineConfig(unit="block", n_units=8,
+                                        all_thread=True), ca)
+            sps.append(tp_warp / tp_block)
+            rows.append((f"ablation_unit/{codec}/{name}/warp_over_block",
+                         tp_warp / tp_block, tp_warp / 1e6))
+        rows.append((f"ablation_unit/{codec}/geomean",
+                     geomean(sps), geomean(sps)))
+        # pool-size sweep on one dataset (finer units -> more streams)
+        ca = corpus[codec]["MC0"]
+        for n_units in (1, 4, 16, 64):
+            tp = _tp(EngineConfig(unit="block", n_units=n_units,
+                                  all_thread=True), ca)
+            rows.append((f"ablation_unit/{codec}/MC0/pool{n_units}_MBps",
+                         tp / 1e6, n_units))
+    return rows

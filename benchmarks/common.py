@@ -1,0 +1,51 @@
+"""Shared benchmark machinery: timing, dataset/blob caching."""
+from __future__ import annotations
+
+import pickle
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.core import api
+from benchmarks import datasets as ds
+
+CACHE = Path("experiments/.bench_cache")
+
+
+def timeit(fn, *args, iters: int = 3, warmup: int = 1):
+    """Median wall time of a jitted callable (block_until_ready)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def compressed_corpus(size_mb: float, codecs, chunk_bytes: int = 64 * 1024,
+                      seed: int = 0):
+    """{codec: {dataset: CompressedArray}} with on-disk cache (tdeflate
+    encoding is the slow python part)."""
+    CACHE.mkdir(parents=True, exist_ok=True)
+    key = f"corpus_{size_mb}_{chunk_bytes}_{seed}_{'-'.join(codecs)}.pkl"
+    f = CACHE / key
+    if f.exists():
+        with open(f, "rb") as fh:
+            return pickle.load(fh)
+    raw = ds.build(size_mb, seed)
+    out = {}
+    for codec in codecs:
+        out[codec] = {name: api.compress(arr, codec, chunk_bytes)
+                      for name, arr in raw.items()}
+    with open(f, "wb") as fh:
+        pickle.dump(out, fh)
+    return out
+
+
+def geomean(xs):
+    xs = np.asarray(list(xs), np.float64)
+    return float(np.exp(np.mean(np.log(np.maximum(xs, 1e-12)))))

@@ -1,0 +1,73 @@
+"""Synthetic datasets mirroring the paper's Table IV corpus characteristics.
+
+| name | mirrors | dtype   | structure                                   |
+|------|---------|---------|---------------------------------------------|
+| MC0  | Mortgage col 0      | uint64 | very long runs (ratio ~0.02)    |
+| MC3  | Mortgage col 3      | fp32   | long runs of repeated floats    |
+| TPC  | Taxi passenger cnt  | int8   | run len ~1-6, tiny alphabet     |
+| TPT  | Taxi payment type   | char   | ~unit runs, 4-symbol alphabet   |
+| CD2  | Criteo dense 2      | uint32 | power-law values                |
+| TC2  | Twitter COO col 1   | uint64 | sorted ids -> delta-friendly    |
+| HRG  | Human ref genome    | char   | ACGTN with repeated motifs      |
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def build(size_mb: float = 2.0, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    n8 = int(size_mb * (1 << 20))           # bytes budget per dataset
+
+    def mc0():
+        n = n8 // 8
+        vals = rng.integers(0, 500, max(4, n // 600)).astype(np.uint64)
+        lens = rng.integers(200, 1000, len(vals))
+        return np.repeat(vals, lens)[:n]
+
+    def mc3():
+        n = n8 // 4
+        vals = (rng.normal(3.5, 1.0, max(4, n // 300)).astype(np.float32))
+        lens = rng.integers(100, 500, len(vals))
+        return np.repeat(vals, lens)[:n]
+
+    def tpc():
+        n = n8
+        vals = rng.choice(np.arange(1, 7, dtype=np.int8), n,
+                          p=[0.72, 0.14, 0.06, 0.04, 0.03, 0.01])
+        # short runs: smear
+        runs = rng.integers(0, n - 8, n // 6)
+        for s in runs[:2000]:
+            vals[s:s + int(rng.integers(2, 6))] = vals[s]
+        return vals
+
+    def tpt():
+        return rng.choice(np.frombuffer(b"1234", np.uint8), n8,
+                          p=[0.55, 0.41, 0.03, 0.01])
+
+    def cd2():
+        n = n8 // 4
+        return np.minimum(rng.zipf(1.5, n), 2 ** 31).astype(np.uint32)
+
+    def tc2():
+        n = n8 // 8
+        ids = np.sort(rng.integers(0, 2 ** 33, n).astype(np.uint64))
+        return ids
+
+    def hrg():
+        motif = rng.choice(np.frombuffer(b"ACGT", np.uint8), 400)
+        out = np.empty(n8, np.uint8)
+        pos = 0
+        while pos < n8:
+            if rng.random() < 0.3:   # repeated motif
+                m = motif[: min(len(motif), n8 - pos)]
+            else:
+                m = rng.choice(np.frombuffer(b"ACGTN", np.uint8),
+                               min(int(rng.integers(50, 300)), n8 - pos),
+                               p=[0.29, 0.21, 0.21, 0.28, 0.01])
+            out[pos:pos + len(m)] = m
+            pos += len(m)
+        return out
+
+    return {"MC0": mc0(), "MC3": mc3(), "TPC": tpc(), "TPT": tpt(),
+            "CD2": cd2(), "TC2": tc2(), "HRG": hrg()}

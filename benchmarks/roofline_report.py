@@ -1,0 +1,63 @@
+"""§Roofline report: renders the dry-run artifact table (one row per
+arch x shape x mesh cell) from experiments/dryrun_results.json."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path("experiments/dryrun_results.json")
+
+
+def run(path: str = str(RESULTS)):
+    p = Path(path)
+    rows = []
+    if not p.exists():
+        rows.append(("roofline/missing", 0.0, "run repro.launch.dryrun first"))
+        return rows
+    results = json.loads(p.read_text())
+    for key, cell in sorted(results.items()):
+        if cell.get("status") == "skipped":
+            rows.append((f"roofline/{key}/skipped", 0.0, cell["reason"][:40]))
+            continue
+        if cell.get("status") != "ok":
+            rows.append((f"roofline/{key}/ERROR", -1.0,
+                         cell.get("error", "?")[:60]))
+            continue
+        r = cell["roofline"]
+        rows.append((f"roofline/{key}/t_compute_s", r["t_compute_s"],
+                     r["dominant"]))
+        rows.append((f"roofline/{key}/t_memory_s", r["t_memory_s"],
+                     r["dominant"]))
+        rows.append((f"roofline/{key}/t_collective_s", r["t_collective_s"],
+                     r["dominant"]))
+        rows.append((f"roofline/{key}/useful_flops_ratio",
+                     r["useful_flops_ratio"], r["mfu_bound"]))
+    return rows
+
+
+def table(path: str = str(RESULTS)) -> str:
+    """Human-readable markdown table (used to generate EXPERIMENTS.md)."""
+    results = json.loads(Path(path).read_text())
+    lines = ["| arch | shape | mesh | t_comp | t_mem | t_coll | dominant "
+             "| useful | mfu_bound |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for key, cell in sorted(results.items()):
+        arch, shape, mesh = key.split("|")[:3]
+        if cell.get("status") == "skipped":
+            lines.append(f"| {arch} | {shape} | {mesh} | — | — | — | "
+                         f"skipped | — | — |")
+            continue
+        if cell.get("status") != "ok":
+            lines.append(f"| {arch} | {shape} | {mesh} | ERR | | | | | |")
+            continue
+        r = cell["roofline"]
+        lines.append(
+            f"| {arch} | {shape} | {mesh} | {r['t_compute_s']:.4f} "
+            f"| {r['t_memory_s']:.4f} | {r['t_collective_s']:.4f} "
+            f"| {r['dominant']} | {r['useful_flops_ratio']:.2f} "
+            f"| {r['mfu_bound']:.3f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(table())

@@ -1,0 +1,56 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--size-mb 1.0] [--only X]
+
+Prints ``name,value,derived`` CSV rows:
+  throughput.py       -> Fig. 7 (absolute) + Fig. 8 (speedups)
+  ablations.py        -> §V-E (all-thread vs single-thread)
+                         §V-F (warp vs block provisioning + pool sweep)
+  ratios.py           -> Table V (compression ratios, symbol lengths)
+  roofline_report.py  -> §Roofline terms from the dry-run artifacts
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--size-mb", type=float, default=0.25,
+                help="per-dataset size; 0.25 keeps the full suite ~10 min on CPU")
+    ap.add_argument("--only", default=None,
+                    help="throughput|ablation_decode|ablation_unit|ratios|roofline")
+    args = ap.parse_args()
+
+    from benchmarks import ablations, ratios, roofline_report, throughput
+    suites = {
+        "throughput": lambda: throughput.run(args.size_mb),
+        "ablation_decode": lambda: ablations.run_decode_ablation(
+            min(args.size_mb, 0.5)),
+        "ablation_unit": lambda: ablations.run_unit_ablation(
+            min(args.size_mb, 0.5)),
+        "ratios": lambda: ratios.run(args.size_mb),
+        "roofline": roofline_report.run,
+    }
+    if args.only:
+        suites = {args.only: suites[args.only]}
+
+    print("name,value,derived")
+    ok = True
+    for sname, fn in suites.items():
+        t0 = time.time()
+        try:
+            for name, value, derived in fn():
+                print(f"{name},{value},{derived}")
+        except Exception as e:  # pragma: no cover
+            ok = False
+            print(f"{sname}/ERROR,{type(e).__name__},{e}", file=sys.stderr)
+        print(f"_suite/{sname}/seconds,{time.time()-t0:.1f},", flush=True)
+    if not ok:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

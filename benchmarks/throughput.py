@@ -1,0 +1,64 @@
+"""Fig. 7 + Fig. 8 analogue: decompression throughput, CODAG vs baseline.
+
+CODAG      = warp-unit provisioning (one chunk per independent stream) with
+             all-thread (vectorized two-phase) decoding.
+baseline   = RAPIDS-like provisioning: a fixed pool of block-level
+             decompression units, each serially looping its chunk share,
+             with single-thread (leader) decoding — the Fig. 1a structure.
+
+CPU wall-clock is a proxy for the A100 numbers (same code lowered for TPU);
+the quantity mirrored from the paper is the RELATIVE speedup structure:
+large gains for RLE v1/v2, small for deflate (decode-serial-bound).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.common import compressed_corpus, geomean, timeit
+from repro.core import format as fmt
+from repro.core.engine import CodagEngine, EngineConfig
+
+CODECS = (fmt.RLE_V1, fmt.RLE_V2, fmt.TDEFLATE)
+
+ENGINES = {
+    "codag": EngineConfig(unit="warp", all_thread=True, backend="xla"),
+    "baseline": EngineConfig(unit="block", n_units=8, all_thread=False,
+                             backend="xla"),
+}
+
+
+def _bench_blob(engine: CodagEngine, blob) -> float:
+    dev = {k: jnp.asarray(v) for k, v in blob.to_device().items()}
+    bits = (int(blob.extras["bitpack_bits"][0])
+            if blob.codec == fmt.BITPACK else 0)
+
+    def run():
+        return engine.decompress_chunks(dev, codec=blob.codec,
+                                        width=blob.width,
+                                        chunk_elems=blob.chunk_elems,
+                                        bits=bits)
+
+    sec = timeit(run)
+    return blob.uncompressed_bytes / sec   # output bytes/s (paper's metric)
+
+
+def run(size_mb: float = 1.0, iters: int = 3):
+    corpus = compressed_corpus(size_mb, CODECS)
+    rows = []
+    for codec in CODECS:
+        speedups = []
+        for name, ca in corpus[codec].items():
+            tps = {}
+            for ename, ecfg in ENGINES.items():
+                eng = CodagEngine(ecfg)
+                tp = sum(_bench_blob(eng, b) for b in ca.blobs) / len(ca.blobs)
+                tps[ename] = tp
+            sp = tps["codag"] / tps["baseline"]
+            speedups.append(sp)
+            rows.append((f"throughput/{codec}/{name}/codag_MBps",
+                         tps["codag"] / 1e6, sp))
+            rows.append((f"throughput/{codec}/{name}/baseline_MBps",
+                         tps["baseline"] / 1e6, sp))
+        rows.append((f"throughput/{codec}/geomean_speedup",
+                     geomean(speedups), geomean(speedups)))
+    return rows

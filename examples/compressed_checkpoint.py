@@ -1,0 +1,45 @@
+"""Codec-compressed, atomic, async checkpointing demo.
+
+Saves a model's training state through the paper's codecs and restores it
+bit-exact — the decompression engine in the checkpoint data plane.
+
+    PYTHONPATH=src python examples/compressed_checkpoint.py
+"""
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.configs import get_arch, reduced
+from repro.core import format as fmt
+from repro.models import model
+from repro.optim import adamw
+
+cfg = reduced(get_arch("qwen3-1.7b"))
+params = model.init_params(cfg, jax.random.key(0))
+opt = adamw.init(params, adamw.AdamWConfig(compress_moments=True))
+state = {"params": params, "opt": opt}
+nbytes = sum(np.asarray(x).nbytes for x in jax.tree.leaves(state))
+
+with tempfile.TemporaryDirectory() as d:
+    t0 = time.time()
+    thread = ckpt.save(d, 100, state, codec=fmt.RLE_V2, async_=True)
+    print(f"async save dispatched in {time.time()-t0:.3f}s "
+          f"(snapshot taken; writer on background thread)")
+    thread.join()
+    print(f"written in {time.time()-t0:.2f}s, state={nbytes/1e6:.1f} MB")
+
+    got = ckpt.restore(d, 100, state)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), state, got)
+    print("restore bit-exact OK")
+
+    # int8 moments are where compression bites (quantized state + rle)
+    import json, pathlib
+    man = json.loads((pathlib.Path(d) / "step_100" / "manifest.json").read_text())
+    ratios = [e.get("ratio") for e in man["leaves"].values() if "ratio" in e]
+    print(f"{len(ratios)} leaves codec-compressed, "
+          f"mean stored ratio {np.mean(ratios):.3f}")
+print("OK")

@@ -1,0 +1,57 @@
+"""Cross-pod gradient/parameter compression demo (DiLoCo-style outer sync).
+
+Runs on 8 fake CPU devices (2 pods x 2 data x 2 model): two pod replicas
+train locally, then reconcile through an int8-compressed all-reduce across
+the slow 'pod' axis — the paper's compression thesis applied to collectives.
+
+    PYTHONPATH=src python examples/grad_compression.py
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.distributed import diloco
+from repro.optim.grad_compress import (topk_wire_bytes,
+                                       wire_bytes_compressed,
+                                       wire_bytes_f32_allreduce)
+
+mesh = Mesh(np.asarray(jax.devices()).reshape(2, 2, 2),
+            ("pod", "data", "model"))
+print("mesh:", dict(mesh.shape))
+
+# a toy per-pod 'model': params trained toward pod-specific targets
+params = {"w": jnp.zeros((1024,))}
+pod_params = diloco.replicate_for_pods(params, 2, mesh)
+targets = jnp.stack([jnp.full((1024,), 1.0), jnp.full((1024,), 2.0)])
+
+
+def inner_step(p, t):
+    g = 2 * (p["w"] - t)
+    return {"w": p["w"] - 0.05 * g}
+
+
+anchor, mom = diloco.init_outer_state(params)
+sync = diloco.make_outer_sync(mesh, diloco.DiLoCoConfig(
+    inner_steps=8, outer_lr=1.0, outer_momentum=0.0, compress=True))
+
+with mesh:
+    jit_inner = jax.jit(jax.vmap(inner_step))
+    jit_sync = jax.jit(sync)
+    for outer in range(5):
+        for _ in range(8):
+            pod_params = jit_inner(pod_params, targets)
+        pod_params, anchor, mom = jit_sync(pod_params, anchor, mom)
+        print(f"outer {outer}: anchor mean={float(anchor['w'].mean()):.4f} "
+              f"(target consensus: 1.5)")
+
+n_bytes = params["w"].size * 4
+print(f"\nwire bytes/outer-sync per pod member:")
+print(f"  f32 ring all-reduce : {wire_bytes_f32_allreduce(n_bytes, 2):,.0f}")
+print(f"  int8 compressed     : {wire_bytes_compressed(n_bytes, 2):,.0f}")
+print(f"  top-1% + bitmask    : {topk_wire_bytes(params['w'].size, 0.01):,.0f}")
+assert abs(float(anchor["w"].mean()) - 1.5) < 0.05
+print("OK")

@@ -1,0 +1,12 @@
+"""Batched serving example: prefill + cached greedy decode.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import subprocess
+import sys
+
+cmd = [sys.executable, "-m", "repro.launch.serve",
+       "--arch", "zamba2-2.7b", "--preset", "tiny",
+       "--batch", "4", "--prompt-len", "32", "--gen", "16"]
+print("+", " ".join(cmd))
+raise SystemExit(subprocess.call(cmd))

@@ -1,0 +1,26 @@
+"""End-to-end training example: ~100M-param model, a few hundred steps,
+compressed data pipeline + fault-tolerant checkpointed loop.
+
+    PYTHONPATH=src python examples/train_lm.py                  # quick (tiny)
+    PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 200
+
+This is a thin veneer over the production driver (repro.launch.train); the
+driver itself is the example.
+"""
+import subprocess
+import sys
+import argparse
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--preset", default="small")
+ap.add_argument("--steps", default="120")
+ap.add_argument("--arch", default="olmo-1b")
+args = ap.parse_args()
+
+cmd = [sys.executable, "-m", "repro.launch.train",
+       "--arch", args.arch, "--preset", args.preset,
+       "--steps", args.steps, "--batch", "4", "--seq", "256",
+       "--ckpt-dir", "/tmp/repro_example_ckpt",
+       "--codec", "rle_v2"]
+print("+", " ".join(cmd))
+raise SystemExit(subprocess.call(cmd))

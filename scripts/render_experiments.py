@@ -1,0 +1,78 @@
+"""Regenerate the generated sections of EXPERIMENTS.md from the dry-run
+artifacts.  Keeps the narrative sections; replaces the marked blocks.
+
+    PYTHONPATH=src python scripts/render_experiments.py
+"""
+import json
+import re
+from pathlib import Path
+
+RES = Path("experiments/dryrun_results.json")
+VAR = Path("experiments/perf_variants.json")
+EXP = Path("EXPERIMENTS.md")
+
+
+def roofline_table(results: dict) -> str:
+    lines = ["| arch | shape | mesh | t_comp (s) | t_mem (s) | t_coll (s) "
+             "| dominant | useful | mfu_bound |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for key, cell in sorted(results.items()):
+        parts = key.split("|")
+        arch, shape, mesh = parts[:3]
+        tag = parts[3] if len(parts) > 3 else ""
+        label = f"{arch}{'+' + tag if tag else ''}"
+        if cell.get("status") == "skipped":
+            lines.append(f"| {label} | {shape} | {mesh} | — | — | — | "
+                         f"skipped (full-attn @500k) | — | — |")
+            continue
+        if cell.get("status") != "ok":
+            lines.append(f"| {label} | {shape} | {mesh} | ERROR | | | | | |")
+            continue
+        r = cell["roofline"]
+        lines.append(
+            f"| {label} | {shape} | {mesh} | {r['t_compute_s']:.4f} "
+            f"| {r['t_memory_s']:.4f} | {r['t_collective_s']:.4f} "
+            f"| {r['dominant']} | {r['useful_flops_ratio']:.2f} "
+            f"| {r['mfu_bound']:.3f} |")
+    return "\n".join(lines)
+
+
+def memory_table(results: dict) -> str:
+    lines = ["| arch | shape | mesh | args GB/dev | temp GB/dev | compile s |",
+             "|---|---|---|---|---|---|"]
+    for key, cell in sorted(results.items()):
+        if cell.get("status") != "ok":
+            continue
+        arch, shape, mesh = key.split("|")[:3]
+        m = cell.get("memory", {})
+        lines.append(
+            f"| {arch} | {shape} | {mesh} "
+            f"| {m.get('argument_size_in_bytes', 0)/1e9:.2f} "
+            f"| {m.get('temp_size_in_bytes', 0)/1e9:.2f} "
+            f"| {cell.get('compile_s', 0)} |")
+    return "\n".join(lines)
+
+
+def replace_block(text: str, marker: str, content: str) -> str:
+    pat = re.compile(
+        rf"(<!-- BEGIN {marker} -->).*?(<!-- END {marker} -->)", re.S)
+    return pat.sub(rf"\1\n{content}\n\2", text)
+
+
+def main() -> None:
+    text = EXP.read_text()
+    if RES.exists():
+        results = json.loads(RES.read_text())
+        single = {k: v for k, v in results.items() if "|single" in k}
+        multi = {k: v for k, v in results.items() if "|multi" in k}
+        text = replace_block(text, "ROOFLINE_SINGLE", roofline_table(single))
+        text = replace_block(text, "MEM_TABLE", memory_table(results))
+    if VAR.exists():
+        variants = json.loads(VAR.read_text())
+        text = replace_block(text, "PERF_VARIANTS", roofline_table(variants))
+    EXP.write_text(text)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

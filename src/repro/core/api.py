@@ -1,0 +1,64 @@
+"""Public compress/decompress API.
+
+    from repro.core import api
+    blob = api.compress(arr, "rle_v2")          # host-side encode
+    out  = api.decompress(blob)                 # device decode, == arr
+
+8-byte dtypes are plane-decomposed (lo/hi uint32 planes compressed as two
+blobs) so RLE runs survive — see DESIGN.md §2 format notes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core import encoders as enc
+from repro.core import format as fmt
+from repro.core.engine import CodagEngine, EngineConfig
+
+
+@dataclasses.dataclass
+class CompressedArray:
+    """One logical array; 1 blob normally, 2 plane blobs for 8-byte dtypes."""
+    blobs: list
+    orig_dtype: str
+    orig_shape: tuple
+
+    @property
+    def ratio(self) -> float:
+        comp = sum(b.compressed_bytes for b in self.blobs)
+        unc = sum(b.uncompressed_bytes for b in self.blobs)
+        return comp / max(1, unc)
+
+    @property
+    def compressed_bytes(self) -> int:
+        return sum(b.compressed_bytes for b in self.blobs)
+
+
+def compress(arr: np.ndarray, codec: str,
+             chunk_bytes: int = fmt.DEFAULT_CHUNK_BYTES,
+             bits: Optional[int] = None) -> CompressedArray:
+    if arr.dtype.itemsize == 8 and codec in (fmt.RLE_V1, fmt.RLE_V2):
+        # plane decomposition: lo/hi u32 planes keep runs intact
+        as_u64 = arr.reshape(-1).view(np.uint64)
+        lo = (as_u64 & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+        hi = (as_u64 >> np.uint64(32)).astype(np.uint32)
+        return CompressedArray(
+            blobs=[enc.compress(lo, codec, chunk_bytes),
+                   enc.compress(hi, codec, chunk_bytes)],
+            orig_dtype=str(arr.dtype), orig_shape=tuple(arr.shape))
+    return CompressedArray(blobs=[enc.compress(arr, codec, chunk_bytes, bits=bits)],
+                           orig_dtype=str(arr.dtype), orig_shape=tuple(arr.shape))
+
+
+def decompress(ca: CompressedArray,
+               engine: Optional[CodagEngine] = None) -> np.ndarray:
+    engine = engine or CodagEngine(EngineConfig())
+    outs = [engine.decompress(b) for b in ca.blobs]
+    if len(outs) == 1:
+        return outs[0]  # reassemble() already restored dtype/shape
+    lo, hi = outs
+    u64 = lo.reshape(-1).astype(np.uint64) | (hi.reshape(-1).astype(np.uint64) << np.uint64(32))
+    return u64.view(np.dtype(ca.orig_dtype)).reshape(ca.orig_shape)

@@ -1,0 +1,161 @@
+"""CODAG-JAX chunked container format (CJC).
+
+Mirrors the indexed-chunk layout of modern compressed data formats (ORC
+stripes / Parquet pages, paper §II-B): the uncompressed stream is split into
+fixed-size chunks, each chunk is compressed independently, and an index of
+per-chunk offsets/sizes enables chunk-parallel decompression.
+
+TPU adaptation: instead of a byte stream + offset list (pointer-chasing), the
+device layout is *rectangular* — a dense ``(num_chunks, max_comp_bytes)``
+uint8 matrix plus per-chunk length vectors — so a Pallas grid cell (the
+"warp" analog, DESIGN.md §2) can DMA its chunk with a plain BlockSpec.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+DEFAULT_CHUNK_BYTES = 128 * 1024  # 128 KiB, same as the paper's evaluation
+
+# Codec registry keys.
+RLE_V1 = "rle_v1"
+RLE_V2 = "rle_v2"
+TDEFLATE = "tdeflate"
+BITPACK = "bitpack"
+CODECS = (RLE_V1, RLE_V2, TDEFLATE, BITPACK)
+
+# Widths supported on device. 8-byte dtypes are transparently viewed as two
+# 4-byte lanes (TPUs have no 64-bit vector type; runs of u64 are runs of the
+# u32 pair view, so RLE still applies).
+SUPPORTED_WIDTHS = (1, 2, 4)
+
+
+def _as_bytes_view(arr: np.ndarray) -> tuple[np.ndarray, int, np.dtype]:
+    """Flatten ``arr`` into a (bytes_view, elem_width, device_dtype) triple."""
+    a = np.ascontiguousarray(arr)
+    width = a.dtype.itemsize
+    if width == 8:  # view u64/f64/i64 as u32 pairs
+        a = a.view(np.uint32)
+        width = 4
+    if width not in SUPPORTED_WIDTHS:
+        raise ValueError(f"unsupported element width {width}")
+    dev_dtype = {1: np.uint8, 2: np.uint16, 4: np.uint32}[width]
+    return a.reshape(-1).view(dev_dtype), width, np.dtype(dev_dtype)
+
+
+@dataclasses.dataclass
+class CompressedBlob:
+    """Host-side compressed container (numpy)."""
+
+    codec: str
+    width: int                    # bytes per element (1/2/4)
+    chunk_elems: int              # uncompressed elements per full chunk
+    total_elems: int              # total uncompressed elements
+    orig_dtype: str               # dtype string of the original array
+    orig_shape: tuple             # original shape (for reconstruction)
+    comp: np.ndarray              # (num_chunks, max_comp_bytes) uint8
+    comp_lens: np.ndarray         # (num_chunks,) int32 — valid bytes per row
+    out_lens: np.ndarray          # (num_chunks,) int32 — elements per chunk
+    extras: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+
+    @property
+    def num_chunks(self) -> int:
+        return int(self.comp.shape[0])
+
+    @property
+    def compressed_bytes(self) -> int:
+        """True compressed payload size (index + per-chunk bytes), no padding."""
+        extra = sum(int(v.nbytes) for k, v in self.extras.items()
+                    if k.startswith("hdr_"))
+        return int(self.comp_lens.sum()) + extra
+
+    @property
+    def uncompressed_bytes(self) -> int:
+        return self.total_elems * self.width
+
+    @property
+    def ratio(self) -> float:
+        """Compression ratio as reported in the paper (comp/uncomp, Table V)."""
+        return self.compressed_bytes / max(1, self.uncompressed_bytes)
+
+    def to_device(self, pad_comp_to: Optional[int] = None) -> Dict[str, Any]:
+        """Return a pytree of device-layout numpy arrays (jnp-convertible).
+
+        ``pad_comp_to`` optionally rounds max_comp_bytes up (e.g. to a lane
+        multiple) so BlockSpecs tile cleanly.
+        """
+        comp = self.comp
+        want = comp.shape[1]
+        # Pad so byte loads 4-at-a-time and bitstream peeks never run off the
+        # end (Alg. 1's "input buffer holds at least two cache lines").
+        want = max(want + 8, pad_comp_to or 0)
+        want = int(np.ceil(want / 128) * 128)  # lane-align
+        if want != comp.shape[1]:
+            comp = np.zeros((comp.shape[0], want), np.uint8)
+            comp[:, : self.comp.shape[1]] = self.comp
+        out = {
+            "comp": comp,
+            "comp_lens": self.comp_lens.astype(np.int32),
+            "out_lens": self.out_lens.astype(np.int32),
+        }
+        if self.codec in (TDEFLATE, BITPACK):
+            # bit codecs consume uint32 words (input_stream funnel loads)
+            out["comp_words"] = np.ascontiguousarray(comp).view(np.uint32)
+        out.update(self.extras)
+        return out
+
+
+def chunk_array(arr: np.ndarray, chunk_bytes: int = DEFAULT_CHUNK_BYTES):
+    """Split ``arr`` into fixed-size element chunks (last may be short)."""
+    flat, width, dev_dtype = _as_bytes_view(arr)
+    chunk_elems = max(1, chunk_bytes // width)
+    n = flat.shape[0]
+    num_chunks = max(1, (n + chunk_elems - 1) // chunk_elems)
+    chunks = [flat[i * chunk_elems : min((i + 1) * chunk_elems, n)]
+              for i in range(num_chunks)]
+    return chunks, chunk_elems, width, dev_dtype
+
+
+def build_blob(
+    codec: str,
+    arr: np.ndarray,
+    encoded: list[bytes],
+    chunk_elems: int,
+    width: int,
+    extras: Optional[Dict[str, np.ndarray]] = None,
+    total_elems: Optional[int] = None,
+) -> CompressedBlob:
+    """Assemble the rectangular device layout from per-chunk byte strings."""
+    if total_elems is None:
+        flat, _, _ = _as_bytes_view(arr)
+        total_elems = flat.shape[0]
+    n = total_elems
+    num_chunks = len(encoded)
+    max_len = max(len(e) for e in encoded) if encoded else 1
+    comp = np.zeros((num_chunks, max_len), np.uint8)
+    comp_lens = np.zeros((num_chunks,), np.int32)
+    out_lens = np.zeros((num_chunks,), np.int32)
+    for i, e in enumerate(encoded):
+        comp[i, : len(e)] = np.frombuffer(e, np.uint8)
+        comp_lens[i] = len(e)
+        out_lens[i] = min(chunk_elems, n - i * chunk_elems)
+    return CompressedBlob(
+        codec=codec,
+        width=width,
+        chunk_elems=chunk_elems,
+        total_elems=int(n),
+        orig_dtype=str(arr.dtype),
+        orig_shape=tuple(arr.shape),
+        comp=comp,
+        comp_lens=comp_lens,
+        out_lens=out_lens,
+        extras=extras or {},
+    )
+
+
+def reassemble(blob: CompressedBlob, chunks_out: np.ndarray) -> np.ndarray:
+    """Stitch decoded (num_chunks, chunk_elems) back to the original array."""
+    flat = np.ascontiguousarray(chunks_out.reshape(-1)[: blob.total_elems])
+    return flat.view(np.dtype(blob.orig_dtype)).reshape(blob.orig_shape)

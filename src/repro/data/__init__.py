@@ -1,0 +1,2 @@
+# Data pipeline: compressed token shards decompressed on device
+# (the paper's decompression engine in the training input path).

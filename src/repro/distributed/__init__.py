@@ -1,0 +1,1 @@
+# Distribution layer: sharding rules, compressed collectives, fault tolerance.

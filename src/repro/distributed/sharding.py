@@ -1,0 +1,249 @@
+"""Sharding rules: logical-axis constraints + parameter PartitionSpec trees.
+
+Model code annotates activations with *logical* axes via ``constrain`` —
+a no-op unless a mesh context is installed (so smoke tests on 1 CPU device
+run the exact same code).  The launch layer installs the context:
+
+    with sharding.use_mesh(mesh):
+        jax.jit(step, in_shardings=..., ...)
+
+Logical axes: "dp" -> all batch axes present in the mesh (("pod","data") on
+the multi-pod mesh, ("data",) single-pod), "model" -> tensor/expert axis.
+
+Parameter specs are derived from pytree path names (regex table below):
+TP over 'model' for attention heads / FFN hidden / vocab, EP over 'model'
+for the MoE expert dimension, everything replicated over the DP axes
+(optimizer state is additionally sharded over 'data' — ZeRO-1 — see
+optim/adamw.py).
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_CTX: dict = {"mesh": None, "policy": "tp"}
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], policy: str = "tp"):
+    """policy: "tp" (default, model axis = tensor/expert parallel) or
+    "dp" (fold the model axis into data parallelism: weights replicated,
+    batch sharded 256-way — the right provisioning for small attn-free
+    models where per-layer TP collectives dominate, §Perf hillclimb 1)."""
+    prev = (_CTX["mesh"], _CTX["policy"])
+    _CTX["mesh"] = mesh
+    _CTX["policy"] = policy
+    try:
+        yield
+    finally:
+        _CTX["mesh"], _CTX["policy"] = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _CTX["mesh"]
+
+
+def current_policy() -> str:
+    return _CTX["policy"]
+
+
+def dp_axes(mesh: Mesh):
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if _CTX["policy"] == "dp" and "model" in mesh.axis_names:
+        axes = axes + ("model",)
+    return axes
+
+
+def _resolve(mesh: Mesh, axis):
+    if axis is None:
+        return None
+    if axis == "dp":
+        ax = dp_axes(mesh)
+        return ax if len(ax) > 1 else (ax[0] if ax else None)
+    return axis if axis in mesh.axis_names else None
+
+
+def dp_groups(batch: int) -> int:
+    """Number of DP shards dividing ``batch`` (1 without a mesh context).
+    Used by the MoE layer to keep routing/sort local per shard."""
+    mesh = _CTX["mesh"]
+    if mesh is None:
+        return 1
+    g = 1
+    for a in dp_axes(mesh):
+        if batch % (g * mesh.shape[a]) == 0:
+            g *= mesh.shape[a]
+    return g
+
+
+def constrain(x, *axes):
+    """with_sharding_constraint on logical axes; no-op without a mesh."""
+    mesh = _CTX["mesh"]
+    if mesh is None:
+        return x
+    spec = P(*(_resolve(mesh, a) for a in axes))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# --------------------------------------------------------------------------
+# parameter PartitionSpecs (regex on pytree path)
+# --------------------------------------------------------------------------
+
+# (path-regex, spec for the *unstacked* param); stacked block params get a
+# leading None prepended automatically when rank exceeds the spec length.
+_RULES = [
+    (r"embed$",              ("model_last",)),        # (V, D): D over model
+    (r"lm_head$",            ("model_last",)),        # (D, V): V over model
+    (r"attn/w[qkv]$",        ("model_last",)),
+    (r"attn/wo$",            ("model_first",)),
+    (r"(mlp|shared|cmix)/w_(up|gate|ck)$",  ("model_last",)),
+    (r"(mlp|shared|cmix)/w_(down|cv)$",     ("model_first",)),
+    (r"cmix/w_cr$",          ("model_last",)),
+    (r"moe/router$",         ("replicate",)),
+    (r"moe/w_(up|gate|down)$", ("expert",)),          # (E, ., .): E over model
+    (r"rwkv/w_(r|k|v|g|decay)$", ("model_last",)),
+    (r"rwkv/w_o$",           ("model_first",)),
+    (r"mamba/in_proj$",      ("model_last",)),
+    (r"mamba/out_proj$",     ("model_first",)),
+    (r"mamba/conv_w$",       ("model_last",)),
+]
+
+
+def _spec_for(path: str, ndim: int, shape, mesh: Mesh) -> P:
+    if _CTX["policy"] == "dp":
+        return P()          # pure DP: weights replicated everywhere
+    msize = mesh.shape.get("model", 1)
+
+    def div(dim_size) -> bool:
+        return dim_size % msize == 0
+
+    for pat, (kind,) in _RULES:
+        if re.search(pat, path):
+            if kind == "replicate":
+                return P()
+            if kind == "model_last":
+                ax = ndim - 1
+                if not div(shape[ax]):
+                    return P()
+                return P(*([None] * ax + ["model"]))
+            if kind == "model_first":
+                # first *matrix* dim (account for stacked leading layer axis
+                # by taking dim -2 for rank>=2 weights)
+                ax = ndim - 2
+                if ax < 0 or not div(shape[ax]):
+                    return P()
+                return P(*([None] * ax + ["model", None]))
+            if kind == "expert":
+                ax = ndim - 3  # (..., E, a, b)
+                if ax < 0 or not div(shape[ax]):
+                    return P()
+                return P(*([None] * ax + ["model", None, None]))
+    return P()  # norms, scalars, mixing vectors: replicated
+
+
+def param_specs(params, mesh: Mesh):
+    """PartitionSpec pytree mirroring ``params``."""
+    def one(path, leaf):
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        return _spec_for(pstr, leaf.ndim, leaf.shape, mesh)
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def param_shardings(params, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(params, mesh))
+
+
+def _zero1_augment(spec: P, shape, mesh: Mesh) -> P:
+    """ZeRO-1: additionally shard optimizer state over 'data' on the first
+    unsharded dim it divides."""
+    if "data" not in mesh.axis_names:
+        return spec
+    dsize = mesh.shape["data"]
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    for i, (p, s) in enumerate(zip(parts, shape)):
+        if p is None and s % dsize == 0:
+            parts[i] = "data"
+            return P(*parts)
+    return spec
+
+
+def opt_specs(opt_state, params, mesh: Mesh):
+    """PartitionSpecs for AdamW state: param specs + ZeRO-1 'data' sharding.
+
+    Handles both plain f32 moments (leaf mirrors the param) and int8
+    block-quantized moments ({"q","s"} dicts; sharded over 'data' on the
+    block dim)."""
+    pspecs = param_specs(params, mesh)
+    dsize = mesh.shape.get("data", 1)
+
+    def moment_spec(pspec, leaf):
+        if isinstance(leaf, dict):  # compressed: {"q": (nb,128), "s": (nb,1)}
+            def qs(x):
+                return (P("data", None) if x.shape[0] % dsize == 0 else P())
+            return {k: qs(v) for k, v in leaf.items()}
+        return _zero1_augment(pspec, leaf.shape, mesh)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_ps = jax.tree.leaves(pspecs)
+    m_leaves = tdef.flatten_up_to(opt_state["m"])
+    v_leaves = tdef.flatten_up_to(opt_state["v"])
+    m_specs = tdef.unflatten([moment_spec(ps, l)
+                              for ps, l in zip(flat_ps, m_leaves)])
+    v_specs = tdef.unflatten([moment_spec(ps, l)
+                              for ps, l in zip(flat_ps, v_leaves)])
+    return {"step": P(), "m": m_specs, "v": v_specs}
+
+
+def opt_shardings(opt_state, params, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        opt_specs(opt_state, params, mesh),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_spec(mesh: Mesh, global_batch: int) -> P:
+    """Shard batch over as many DP axes as divide it; replicate otherwise."""
+    axes = []
+    prod = 1
+    for a in dp_axes(mesh):
+        if global_batch % (prod * mesh.shape[a]) == 0:
+            axes.append(a)
+            prod *= mesh.shape[a]
+    if not axes:
+        return P(None)
+    return P(tuple(axes) if len(axes) > 1 else axes[0])
+
+
+def cache_spec(mesh: Mesh, cfg, batch: int) -> dict:
+    """PartitionSpecs for the decode cache (see model.init_cache layout)."""
+    msize = mesh.shape.get("model", 1)
+    b = batch_spec(mesh, batch)
+    bax = b[0] if len(b) else None
+    kv_shardable = cfg.n_kv % msize == 0
+    # (L, B, S, n_kv, hd): shard kv heads over model if divisible, else the
+    # sequence dim (GSPMD inserts the partial-softmax collectives).
+    if kv_shardable:
+        kvspec = P(None, bax, None, "model", None)
+    else:
+        kvspec = P(None, bax, "model", None, None)
+    specs = {"pos": P()}
+    if cfg.mixer == "attn":
+        specs["k"] = kvspec
+        specs["v"] = kvspec
+    elif cfg.mixer == "rwkv6":
+        specs["wkv"] = P(None, bax, "model", None, None)   # heads over model
+        specs["x_att"] = P(None, bax, "model")
+        specs["x_ffn"] = P(None, bax, "model")
+    elif cfg.mixer == "mamba2":
+        specs["ssm"] = P(None, bax, "model", None, None)
+        specs["conv"] = P(None, bax, None, "model")
+        if cfg.attn_every:
+            specs["k"] = kvspec
+            specs["v"] = kvspec
+    return specs

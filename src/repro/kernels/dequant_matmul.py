@@ -1,0 +1,67 @@
+"""Fused int8-dequant matmul — Pallas TPU kernel.
+
+The compute hot-spot of quantized serving (§Perf hillclimb 2 / EXPERIMENTS
+H2-B): y = x @ (q * s) with int8 weights and per-output-channel scales.
+Fusing the dequant into the matmul K-loop means the memory system reads
+1 byte/weight (the entire point of weight compression) and the f32/bf16
+expansion only ever exists tile-at-a-time in VMEM — never in HBM.
+
+Classic tiled-matmul structure: grid (M/bm, N/bn, K/bk), f32 VMEM
+accumulator, MXU-aligned 128-multiple tiles, dequant applied to the weight
+tile on load.  Validated in interpret mode against ref.py's oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def ref_dequant_matmul(x: jnp.ndarray, q: jnp.ndarray,
+                       s: jnp.ndarray) -> jnp.ndarray:
+    """Oracle: x (M,K) @ dequant(q (K,N), s (1,N)) -> (M,N) in x.dtype."""
+    w = q.astype(jnp.float32) * s.astype(jnp.float32)
+    return (x.astype(jnp.float32) @ w).astype(x.dtype)
+
+
+def _kernel(x_ref, q_ref, s_ref, o_ref, acc_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = q_ref[...].astype(jnp.float32) * s_ref[...].astype(jnp.float32)
+    acc_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32), w,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bn", "bk", "interpret"))
+def dequant_matmul(x: jnp.ndarray, q: jnp.ndarray, s: jnp.ndarray, *,
+                   bm: int = 128, bn: int = 128, bk: int = 128,
+                   interpret: bool = False) -> jnp.ndarray:
+    """x: (M,K) bf16/f32, q: (K,N) int8, s: (1,N) f32 -> (M,N) x.dtype."""
+    M, K = x.shape
+    _, N = q.shape
+    bm_, bn_, bk_ = min(bm, M), min(bn, N), min(bk, K)
+    assert M % bm_ == 0 and N % bn_ == 0 and K % bk_ == 0, (M, N, K)
+    grid = (M // bm_, N // bn_, K // bk_)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bn_), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.float32)],  # f32 acc tile
+        interpret=interpret,
+    )(x, q, s)

@@ -1,0 +1,108 @@
+"""jit'd dispatch layer over the decompression kernels.
+
+Backends:
+  "xla"    — the two-phase decode bodies vmapped across chunks and compiled
+             by XLA (used on CPU and as the production non-Pallas path).
+  "pallas" — pl.pallas_call kernels (interpret=True on CPU for validation,
+             interpret=False on real TPU).
+  "oracle" — the sequential stream-based reference decoders (kernels/ref.py).
+  "scalar" — the single-thread-decoding §V-E ablation baselines.
+
+All entry points take the device pytree from ``CompressedBlob.to_device()``
+plus the blob's static metadata, and return (num_chunks, chunk_elems).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import format as fmt
+from repro.kernels import bitpack, ref, rle_v1, rle_v2, tdeflate
+
+BACKENDS = ("xla", "pallas", "oracle", "scalar")
+
+
+def words_view(comp: jnp.ndarray) -> jnp.ndarray:
+    """(n, C) uint8 -> (n, C//4) uint32 little-endian word view."""
+    n, c = comp.shape
+    b = comp.reshape(n, c // 4, 4).astype(jnp.uint32)
+    return (b[..., 0] | (b[..., 1] << 8) | (b[..., 2] << 16) | (b[..., 3] << 24))
+
+
+@functools.partial(jax.jit, static_argnames=("codec", "width", "chunk_elems",
+                                             "backend", "interpret", "bits"))
+def decode(dev: Dict[str, Any], *, codec: str, width: int, chunk_elems: int,
+           backend: str = "xla", interpret: bool = True,
+           bits: int = 0) -> jnp.ndarray:
+    """Decode every chunk. Returns (num_chunks, chunk_elems) device array."""
+    comp = dev["comp"]
+    out_lens = dev["out_lens"]
+
+    if codec == fmt.RLE_V1:
+        if backend == "pallas":
+            return rle_v1.decode_pallas(comp, out_lens, width=width,
+                                        chunk_elems=chunk_elems,
+                                        interpret=interpret)
+        body = {"xla": rle_v1.decode_chunk,
+                "scalar": rle_v1.decode_chunk_scalar,
+                "oracle": ref.decode_rle_v1_impl}[backend]
+        return jax.vmap(lambda c, n: body(c, n, chunk_elems, width))(comp, out_lens)
+
+    if codec == fmt.RLE_V2:
+        if backend == "pallas":
+            return rle_v2.decode_pallas(comp, out_lens, width=width,
+                                        chunk_elems=chunk_elems,
+                                        interpret=interpret)
+        body = {"xla": rle_v2.decode_chunk,
+                "scalar": rle_v2.decode_chunk_scalar,
+                "oracle": ref.decode_rle_v2_impl}[backend]
+        return jax.vmap(lambda c, n: body(c, n, chunk_elems, width))(comp, out_lens)
+
+    if codec == fmt.TDEFLATE:
+        words = dev.get("comp_words")
+        if words is None:
+            words = words_view(comp)
+        luts = tuple(dev[k].astype(jnp.int32) for k in
+                     ("lut_lsym", "lut_lbits", "lut_dsym", "lut_dbits"))
+        if backend == "pallas":
+            return tdeflate.decode_pallas(words, luts, out_lens,
+                                          chunk_bytes=chunk_elems,
+                                          interpret=interpret)
+        body = {"xla": tdeflate.decode_chunk,
+                "scalar": tdeflate.decode_chunk_scalar,
+                "oracle": ref.decode_tdeflate_impl}[backend]
+        return jax.vmap(
+            lambda w_, a, b, c, d, n: body(w_, a, b, c, d, n, chunk_elems)
+        )(words, *luts, out_lens)
+
+    if codec == fmt.BITPACK:
+        words = dev.get("comp_words")
+        if words is None:
+            words = words_view(comp)
+        if backend == "pallas":
+            return bitpack.unpack_pallas(words, bits=bits,
+                                         out_elems=chunk_elems,
+                                         interpret=interpret)
+        return jax.vmap(
+            lambda w_: bitpack.unpack_tile(w_, jnp.int32(0), chunk_elems, bits)
+        )(words)
+
+    raise ValueError(f"unknown codec {codec}")
+
+
+def decode_blob(blob: fmt.CompressedBlob, backend: str = "xla",
+                interpret: bool = True) -> np.ndarray:
+    """Host convenience: decode a CompressedBlob back to the original array."""
+    dev = {k: jnp.asarray(v) for k, v in blob.to_device().items()}
+    bits = int(blob.extras["bitpack_bits"][0]) if blob.codec == fmt.BITPACK else 0
+    out = decode(dev, codec=blob.codec, width=blob.width,
+                 chunk_elems=blob.chunk_elems, backend=backend,
+                 interpret=interpret, bits=bits)
+    out = np.asarray(out)
+    if blob.codec == fmt.BITPACK:
+        out = out.astype({1: np.uint8, 2: np.uint16, 4: np.uint32}[blob.width])
+    return fmt.reassemble(blob, out)

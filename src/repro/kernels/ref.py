@@ -1,0 +1,233 @@
+"""Pure-jnp oracle decoders (reference semantics for every kernel).
+
+These are the *paper-faithful* sequential decode loops, written directly on
+top of the ``input_stream`` / ``output_stream`` API (core/streams.py): serial
+across symbols — exactly the data dependence the paper describes (§II-B) —
+with vector-parallel writes inside each symbol (the warp's collaborative
+write).  They are deliberately the most obviously-correct implementations;
+the Pallas kernels (rle_v1.py / rle_v2.py / tdeflate.py / bitpack.py) use the
+two-phase vectorized scheme and are validated against these oracles.
+
+All functions operate on a SINGLE chunk with static bounds; callers vmap
+across chunks (chunk-parallelism, §II-B).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import streams as st
+from repro.core import encoders as enc
+
+DEV_DTYPE = {1: jnp.uint8, 2: jnp.uint16, 4: jnp.uint32}
+
+# deflate tables as jnp constants
+LEN_EXTRA = jnp.asarray(enc.LEN_EXTRA)
+LEN_BASE = jnp.asarray(enc.LEN_BASE)
+DIST_EXTRA = jnp.asarray(enc.DIST_EXTRA)
+DIST_BASE = jnp.asarray(enc.DIST_BASE)
+
+MAX_MATCH_WIN = 272          # >= MAX_MATCH (258), slack for the blend window
+RLE1_MAX_WIN = 132           # >= 130
+RLE2_LONG_WIN = enc.RLE2_MAX_LONG + 2
+RLE2_LIT_WIN = enc.RLE2_MAX_LIT
+
+
+def _write_values(s: st.OutStream, vals: jnp.ndarray, length,
+                  max_len: int) -> st.OutStream:
+    """Blend ``length`` precomputed values into the output at pos."""
+    idx = jnp.arange(max_len, dtype=jnp.int32)
+    cur = lax.dynamic_slice(s.buf, (s.pos,), (max_len,))
+    new = jnp.where(idx < length, vals.astype(s.buf.dtype), cur)
+    return s._replace(buf=lax.dynamic_update_slice(s.buf, new, (s.pos,)),
+                      pos=s.pos + length.astype(jnp.int32))
+
+
+def _gather_values(comp: jnp.ndarray, byte_offs: jnp.ndarray,
+                   width: int) -> jnp.ndarray:
+    """Vector-assemble little-endian fixed-width values at byte offsets."""
+    v = jnp.take(comp, byte_offs, mode="clip").astype(jnp.uint32)
+    for i in range(1, width):
+        v = v | (jnp.take(comp, byte_offs + i, mode="clip").astype(jnp.uint32)
+                 << jnp.uint32(8 * i))
+    return v
+
+
+# --------------------------------------------------------------------------
+# RLE v1 oracle
+# --------------------------------------------------------------------------
+
+
+def decode_rle_v1_impl(comp: jnp.ndarray, out_len_dyn, out_len_max: int,
+                       width: int) -> jnp.ndarray:
+    """comp: (>=comp_len+4,) uint8 padded. Returns (out_len_max,) dev dtype."""
+    dt = DEV_DTYPE[width]
+    out = st.outstream(out_len_max + RLE1_MAX_WIN, dt)
+    lit_idx = jnp.arange(128, dtype=jnp.int32)
+
+    def cond(state):
+        pos, s = state
+        return s.pos < out_len_dyn
+
+    def body(state):
+        pos, s = state
+        c = st.read_byte_at(comp, pos)
+        is_run = c < 128
+        run_len = c + 3
+        lit_len = 256 - c
+        val = st.read_value_at(comp, pos + 1, width)
+        s_run = st.write_run(s, val, run_len, jnp.uint32(0), RLE1_MAX_WIN)
+        lit_vals = _gather_values(comp, pos + 1 + lit_idx * width, width)
+        s_lit = _write_values(s, jnp.pad(lit_vals, (0, RLE1_MAX_WIN - 128)),
+                              lit_len, RLE1_MAX_WIN)
+        s = jax.tree.map(lambda a, b: jnp.where(is_run, a, b), s_run, s_lit)
+        pos = pos + 1 + jnp.where(is_run, width, lit_len * width)
+        return pos, s
+
+    _, s = lax.while_loop(cond, body, (jnp.int32(0), out))
+    return s.buf[:out_len_max]
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def decode_rle_v1(comp: jnp.ndarray, out_len: int, width: int) -> jnp.ndarray:
+    return decode_rle_v1_impl(comp, jnp.int32(out_len), out_len, width)
+
+
+# --------------------------------------------------------------------------
+# RLE v2 oracle
+# --------------------------------------------------------------------------
+
+
+def decode_rle_v2_impl(comp: jnp.ndarray, out_len_dyn, out_len_max: int,
+                       width: int) -> jnp.ndarray:
+    dt = DEV_DTYPE[width]
+    out = st.outstream(out_len_max + RLE2_LONG_WIN, dt)
+    lit_idx = jnp.arange(RLE2_LIT_WIN, dtype=jnp.int32)
+
+    def cond(state):
+        pos, s = state
+        return s.pos < out_len_dyn
+
+    def body(state):
+        pos, s = state
+        h = st.read_byte_at(comp, pos)
+        mode = h >> 6
+        f = h & 63
+        nxt = st.read_byte_at(comp, pos + 1)
+        is_run = mode == 0
+        is_delta = mode == 1
+        is_lit = mode == 2
+        is_long = mode == 3
+        length = jnp.where(is_lit, f + 1,
+                  jnp.where(is_long, ((f << 8) | nxt) + 3, f + 3))
+        val_off = pos + 1 + jnp.where(is_long, 1, 0)
+        base = st.read_value_at(comp, val_off, width)
+        delta = jnp.where(is_delta,
+                          st.read_value_at(comp, val_off + width, width),
+                          jnp.uint32(0))
+        # run/delta/long-run all expand as init + delta*k (delta==0 for runs)
+        s_run = st.write_run(s, base, length, delta, RLE2_LONG_WIN)
+        lit_vals = _gather_values(comp, pos + 1 + lit_idx * width, width)
+        s_lit = _write_values(
+            s, jnp.pad(lit_vals, (0, RLE2_LONG_WIN - RLE2_LIT_WIN)),
+            length, RLE2_LONG_WIN)
+        s = jax.tree.map(lambda a, b: jnp.where(is_lit, b, a), s_run, s_lit)
+        adv = jnp.where(is_lit, 1 + length * width,
+               jnp.where(is_delta, 1 + 2 * width,
+                jnp.where(is_long, 2 + width, 1 + width)))
+        return pos + adv, s
+
+    _, s = lax.while_loop(cond, body, (jnp.int32(0), out))
+    return s.buf[:out_len_max]
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def decode_rle_v2(comp: jnp.ndarray, out_len: int, width: int) -> jnp.ndarray:
+    return decode_rle_v2_impl(comp, jnp.int32(out_len), out_len, width)
+
+
+# --------------------------------------------------------------------------
+# tdeflate oracle (classic inflate loop: huffman -> literal | (len,dist) copy)
+# --------------------------------------------------------------------------
+
+
+def decode_tdeflate_impl(words: jnp.ndarray, lut_lsym: jnp.ndarray,
+                         lut_lbits: jnp.ndarray, lut_dsym: jnp.ndarray,
+                         lut_dbits: jnp.ndarray, out_len_dyn,
+                         out_len_max: int) -> jnp.ndarray:
+    """words: (>=n_words+2,) uint32 LSB-first bitstream. uint8[out_len_max]."""
+    out = st.outstream(out_len_max + MAX_MATCH_WIN, jnp.uint8)
+    bs0 = st.bitstream(words)
+
+    def cond(state):
+        bs, s, done = state
+        return jnp.logical_and(~done, s.pos < out_len_dyn)
+
+    def body(state):
+        bs, s, done = state
+        v = st.peek_bits(bs, enc.MAX_CODE_BITS)
+        sym = jnp.take(lut_lsym, v.astype(jnp.int32), mode="clip").astype(jnp.int32)
+        nb = jnp.take(lut_lbits, v.astype(jnp.int32), mode="clip").astype(jnp.int32)
+        is_lit = (sym < 256) & (nb > 0)
+        # nb == 0 marks an invalid/padding code word: stop (corrupt guard)
+        is_eob = (sym == 256) | (nb == 0)
+        is_match = (sym > 256) & (nb > 0)
+        # ---- match decode (computed unconditionally, selected at the end)
+        lc = jnp.clip(sym - 257, 0, 28)
+        bs_m = st.skip_bits(bs, nb)
+        eb = jnp.take(LEN_EXTRA, lc)
+        extra = st.peek_bits(bs_m, eb)
+        length = jnp.take(LEN_BASE, lc).astype(jnp.uint32) + extra
+        bs_m = st.skip_bits(bs_m, eb)
+        dv = st.peek_bits(bs_m, enc.MAX_CODE_BITS)
+        dsym = jnp.take(lut_dsym, dv.astype(jnp.int32), mode="clip").astype(jnp.int32)
+        dnb = jnp.take(lut_dbits, dv.astype(jnp.int32), mode="clip").astype(jnp.int32)
+        bs_m = st.skip_bits(bs_m, dnb)
+        deb = jnp.take(DIST_EXTRA, dsym)
+        dextra = st.peek_bits(bs_m, deb)
+        dist = jnp.take(DIST_BASE, dsym).astype(jnp.uint32) + dextra
+        bs_m = st.skip_bits(bs_m, deb)
+        s_match = st.memcpy(s, dist, length, MAX_MATCH_WIN)
+        # ---- literal
+        s_lit = st.write_byte(s, (sym & 0xFF).astype(jnp.uint8))
+        s_new = jax.tree.map(
+            lambda a, b, c: jnp.where(is_lit, a, jnp.where(is_match, b, c)),
+            s_lit, s_match, s)
+        bs_lit = st.skip_bits(bs, nb)
+        bs_new = jax.tree.map(lambda a, b: jnp.where(is_match, a, b), bs_m, bs_lit)
+        return bs_new, s_new, jnp.logical_or(done, is_eob)
+
+    _, s, _ = lax.while_loop(cond, body, (bs0, out, jnp.bool_(False)))
+    return s.buf[:out_len_max]
+
+
+@functools.partial(jax.jit, static_argnums=(5,))
+def decode_tdeflate(words: jnp.ndarray, lut_lsym: jnp.ndarray,
+                    lut_lbits: jnp.ndarray, lut_dsym: jnp.ndarray,
+                    lut_dbits: jnp.ndarray, out_len: int) -> jnp.ndarray:
+    return decode_tdeflate_impl(words, lut_lsym, lut_lbits, lut_dsym,
+                                lut_dbits, jnp.int32(out_len), out_len)
+
+
+# --------------------------------------------------------------------------
+# bitpack oracle
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def unpack_bits(words: jnp.ndarray, out_len: int, bits: int) -> jnp.ndarray:
+    """words: (>=nwords+1,) uint32. Returns uint32[out_len] (values < 2^bits)."""
+    idx = jnp.arange(out_len, dtype=jnp.int32)
+    bitpos = idx * bits
+    w = bitpos >> 5
+    off = (bitpos & 31).astype(jnp.uint32)
+    w0 = jnp.take(words, w, mode="clip")
+    w1 = jnp.take(words, w + 1, mode="clip")
+    lo = jnp.right_shift(w0, off)
+    sh = (jnp.uint32(32) - off) & jnp.uint32(31)
+    hi = jnp.where(off > 0, jnp.left_shift(w1, sh), jnp.uint32(0))
+    mask = jnp.uint32((1 << bits) - 1) if bits < 32 else jnp.uint32(0xFFFFFFFF)
+    return (lo | hi) & mask

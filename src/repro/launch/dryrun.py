@@ -1,0 +1,290 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any jax import (jax locks the device
+count at first init).  512 host devices back both the single-pod 16x16 mesh
+and the 2x16x16 multi-pod mesh.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all            # every cell
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh multi
+
+Results (cost analysis, memory analysis, per-op collective bytes, roofline
+terms) are appended incrementally to experiments/dryrun_results.json so an
+interrupted sweep resumes where it left off.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro import configs
+from repro.configs.base import SHAPES, get_arch, shape_applicable
+from repro.distributed import sharding
+from repro.launch import mesh as mesh_lib
+from repro.launch import steps
+from repro.roofline import analysis
+
+RESULTS = Path("experiments/dryrun_results.json")
+
+
+def _mem_dict(ma) -> dict:
+    if ma is None:
+        return {}
+    fields = ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes")
+    return {f: int(getattr(ma, f, 0) or 0) for f in fields}
+
+
+# --- §Perf variants ---------------------------------------------------------
+# Each variant transforms (cfg, policy, param_transform); baselines are the
+# untagged cells.  See EXPERIMENTS.md §Perf for the hypothesis log.
+
+def _quantize_params(params):
+    from repro.models import moe as moe_lib
+    out = dict(params)
+    if "blocks" in out and isinstance(out["blocks"], dict) \
+            and "moe" in out["blocks"]:
+        blocks = dict(out["blocks"])
+        blocks["moe"] = moe_lib.abstract_quantize_expert_weights(
+            blocks["moe"])
+        out["blocks"] = blocks
+    return out
+
+
+VARIANTS = {
+    "": dict(),
+    # paper-faithful attention (no triangular block skip) — the baseline
+    # against which block_skip's FLOP halving is measured
+    "noskip": dict(cfg=lambda c: dataclasses.replace(c, block_skip=False)),
+    # hillclimb 1: fold 'model' axis into pure DP (small attn-free models)
+    "dp": dict(policy="dp"),
+    # hillclimb 2 (a): per-group decode dispatch (the pre-fix baseline)
+    "moe_groupdecode": dict(
+        cfg=lambda c: dataclasses.replace(c, moe_decode_global=False)),
+    # hillclimb 2 (b): int8 expert weights, dequantized on use
+    "quantx": dict(param_transform=_quantize_params),
+    # hillclimb 3: chunkwise-parallel SSD
+    "ssd128": dict(cfg=lambda c: dataclasses.replace(c, ssd_chunk=128)),
+    "ssd256": dict(cfg=lambda c: dataclasses.replace(c, ssd_chunk=256)),
+}
+
+
+def _compile_cell(cfg, shape, mesh, unroll: bool, param_transform=None):
+    """Lower + compile one (cfg, shape) on mesh. Returns compiled object."""
+    if shape.kind == "train":
+        params, opt_state = steps.abstract_train_state(cfg)
+        (p_sh, o_sh, b_sh), out_sh = steps.train_shardings(cfg, shape, mesh)
+        fn = steps.build_train_step(cfg, unroll=unroll)
+        lowered = jax.jit(
+            fn, in_shardings=(p_sh, o_sh, b_sh), out_shardings=out_sh,
+            donate_argnums=(0, 1),
+        ).lower(params, opt_state, steps.input_specs(cfg, shape))
+    elif shape.kind == "prefill":
+        params = steps.abstract_params_cached(cfg)
+        if param_transform:
+            params = param_transform(params)
+        p_sh = sharding.param_shardings(params, mesh)
+        b_sh = steps.batch_shardings(cfg, shape, mesh)
+        fn = steps.build_prefill_step(cfg, unroll=unroll)
+        lowered = jax.jit(
+            fn, in_shardings=(p_sh, b_sh), out_shardings=None,
+        ).lower(params, steps.input_specs(cfg, shape))
+    else:  # decode
+        params = steps.abstract_params_cached(cfg)
+        if param_transform:
+            params = param_transform(params)
+        cache = steps.abstract_cache(cfg, shape)
+        p_sh = sharding.param_shardings(params, mesh)
+        cspec = sharding.cache_spec(mesh, cfg, shape.global_batch)
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        c_sh = {k: NamedSharding(mesh, v) for k, v in cspec.items()}
+        b_sh = steps.batch_shardings(cfg, shape, mesh)
+        out_sh = (NamedSharding(mesh, P()), c_sh)
+        fn = steps.build_serve_step(cfg, unroll=unroll)
+        lowered = jax.jit(
+            fn, in_shardings=(p_sh, c_sh, b_sh), out_shardings=out_sh,
+            donate_argnums=(1,),
+        ).lower(params, cache, steps.input_specs(cfg, shape))
+    return lowered.compile()
+
+
+def _raw_costs(compiled) -> dict:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    coll = analysis.collective_bytes(compiled.as_text())
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "coll": coll}
+
+
+def _lincomb(a: dict, b: dict, fa: float, fb: float) -> dict:
+    keys = set(a["coll"]) | set(b["coll"])
+    return {
+        "flops": fa * a["flops"] + fb * b["flops"],
+        "bytes": fa * a["bytes"] + fb * b["bytes"],
+        "coll": {k: max(0.0, fa * a["coll"].get(k, 0)
+                        + fb * b["coll"].get(k, 0)) for k in keys},
+    }
+
+
+def probe_costs(cfg, shape, mesh, param_transform=None) -> dict:
+    """Exact per-device HLO costs via two python-unrolled probe lowerings.
+
+    XLA's cost_analysis counts loop bodies once, so the full-scale
+    scan-over-layers compile undercounts by ~n_layers.  We instead lower
+    the model at p1 and p2 = 2*p1 layers with every structural loop
+    python-unrolled (layers, attention chunks, loss chunks) and extrapolate
+    linearly: cost(L) = cost(p1) + (L-p1)/g * (cost(p2)-cost(p1)), with
+    g = attn_every (zamba2's shared block recurs every g layers) else 1.
+    Remaining undercount: the rwkv6/mamba2 *time-step* recurrence bodies
+    (<2% of mixer FLOPs — projections dominate and are counted exactly).
+
+    dtype note: probes lower in f32.  XLA:CPU has no native bf16 GEMM and
+    materializes an f32 COPY of every bf16 weight per use (verified on the
+    1T MoE decode cell: 2.1x bytes inflation), which would poison the
+    memory/collective terms.  f32 probes have no conversion copies; bytes
+    and collective volumes are scaled by 0.5 to model TPU-native bf16
+    (f32 optimizer-moment traffic is thereby understated 2x — it is ZeRO-
+    sharded 16-way and small; documented in EXPERIMENTS.md §Roofline).
+    FLOP counts are dtype-independent.
+    """
+    g = cfg.attn_every if cfg.attn_every else 1
+    p1, p2 = g, 2 * g
+    cfg1 = dataclasses.replace(cfg, n_layers=p1, dtype="float32")
+    cfg2 = dataclasses.replace(cfg, n_layers=p2, dtype="float32")
+    c1 = _raw_costs(_compile_cell(cfg1, shape, mesh, unroll=True,
+                                  param_transform=param_transform))
+    c2 = _raw_costs(_compile_cell(cfg2, shape, mesh, unroll=True,
+                                  param_transform=param_transform))
+    steps_n = (cfg.n_layers - p1) / g
+    out = _lincomb(c1, _lincomb(c2, c1, 1.0, -1.0), 1.0, steps_n)
+    out["bytes"] *= 0.5
+    out["coll"] = {k: v * 0.5 for k, v in out["coll"].items()}
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             extra_tag: str = "", probes: bool = True,
+             variant: str = "") -> dict:
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"status": "skipped", "reason": why}
+    vspec = VARIANTS[variant]
+    if "cfg" in vspec:
+        cfg = vspec["cfg"](cfg)
+    policy = vspec.get("policy", "tp")
+    ptrans = vspec.get("param_transform")
+
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(mesh.devices.size)
+    t0 = time.time()
+    with mesh, sharding.use_mesh(mesh, policy=policy):
+        # 1) full-scale compile: proves sharding + memory at target scale
+        compiled = _compile_cell(cfg, shape, mesh, unroll=False,
+                                 param_transform=ptrans)
+        t_compile = time.time() - t0
+        mem = compiled.memory_analysis()
+        print(mem)                                    # proves it fits
+        raw = _raw_costs(compiled)
+        print({"flops(raw,scan)": raw["flops"], "bytes(raw,scan)": raw["bytes"]})
+        # 2) probe lowerings: exact per-layer cost extrapolation
+        cost = (probe_costs(cfg, shape, mesh, param_transform=ptrans)
+                if probes else raw)
+
+    mf = analysis.model_flops_for(cfg, shape)
+    roof = analysis.Roofline(
+        flops=cost["flops"], hbm_bytes=cost["bytes"],
+        coll_bytes=float(sum(cost["coll"].values())),
+        coll_by_op={k: int(v) for k, v in cost["coll"].items()},
+        model_flops=mf, n_chips=n_chips)
+
+    return {
+        "status": "ok",
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips,
+        "compile_s": round(t_compile, 1),
+        "total_s": round(time.time() - t0, 1),
+        "memory": _mem_dict(mem),
+        "raw_scan_costs": {"flops": raw["flops"], "bytes": raw["bytes"],
+                           "coll": raw["coll"]},
+        "roofline": roof.to_dict(),
+        "tag": extra_tag,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=("single", "multi", "both"), default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=str(RESULTS))
+    ap.add_argument("--force", action="store_true", help="recompute cached cells")
+    ap.add_argument("--variant", default="", choices=sorted(VARIANTS),
+                    help="perf variant (EXPERIMENTS.md §Perf)")
+    ap.add_argument("--no-probes", action="store_true",
+                    help="compile + memory proof only (multi-pod pass; "
+                         "the roofline table is single-pod per spec)")
+    args = ap.parse_args()
+
+    out_path = Path(args.out)
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    results = {}
+    if out_path.exists():
+        results = json.loads(out_path.read_text())
+
+    archs = configs.list_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                key = f"{arch}|{shape}|{'multi' if multi else 'single'}"
+                if args.variant:
+                    key += f"|{args.variant}"
+                if key in results and results[key].get("status") in ("ok", "skipped") \
+                        and not args.force:
+                    print(f"[cached] {key}")
+                    continue
+                print(f"[dryrun] {key} ...", flush=True)
+                try:
+                    res = run_cell(arch, shape, multi, args.variant,
+                                   variant=args.variant,
+                                   probes=not args.no_probes)
+                except Exception as e:  # record failures; they are bugs
+                    res = {"status": "error", "error": f"{type(e).__name__}: {e}",
+                           "trace": traceback.format_exc()[-2000:]}
+                    print(res["error"])
+                results[key] = res
+                out_path.write_text(json.dumps(results, indent=1))
+                if res["status"] == "ok":
+                    r = res["roofline"]
+                    print(f"  ok: compile={res['compile_s']}s "
+                          f"dom={r['dominant']} "
+                          f"t=({r['t_compute_s']:.4f},{r['t_memory_s']:.4f},"
+                          f"{r['t_collective_s']:.4f})s "
+                          f"useful={r['useful_flops_ratio']:.2f}", flush=True)
+
+    n_ok = sum(1 for v in results.values() if v.get("status") == "ok")
+    n_skip = sum(1 for v in results.values() if v.get("status") == "skipped")
+    n_err = sum(1 for v in results.values() if v.get("status") == "error")
+    print(f"done: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

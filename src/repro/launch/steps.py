@@ -1,0 +1,154 @@
+"""Step functions (train / prefill / serve) + abstract input specs.
+
+Everything here is AOT-friendly: `input_specs` produces ShapeDtypeStructs,
+`abstract_state` builds the params/optimizer/cache trees via eval_shape, and
+`build_*` return (fn, in_shardings, out_shardings, example_inputs) tuples the
+dry-run lowers with `.lower().compile()` and train.py runs with real arrays.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.distributed import sharding
+from repro.models import model
+from repro.optim import adamw
+
+DT = model.DTYPES
+
+
+# --------------------------------------------------------------------------
+# abstract inputs
+# --------------------------------------------------------------------------
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = DT[cfg.dtype]
+    if shape.kind == "train":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+        if cfg.n_prefix:
+            # modality frontend stub: precomputed frame/patch embeddings
+            specs["prefix_emb"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_prefix, cfg.d_model), dt)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        if cfg.n_prefix:
+            specs["prefix_emb"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_prefix, cfg.d_model), dt)
+        return specs
+    # decode: one new token against a KV/state cache of length seq_len
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+
+
+def batch_shardings(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh):
+    spec = sharding.batch_spec(mesh, shape.global_batch)
+    bax = spec[0] if len(spec) else None
+    out = {}
+    for k, v in input_specs(cfg, shape).items():
+        out[k] = NamedSharding(mesh, P(*([bax] + [None] * (v.ndim - 1))))
+    return out
+
+
+# --------------------------------------------------------------------------
+# train
+# --------------------------------------------------------------------------
+
+
+def build_train_step(cfg: ArchConfig, opt_cfg: Optional[adamw.AdamWConfig] = None,
+                     remat: bool = True, grad_compressor=None,
+                     unroll: bool = False):
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+
+    def train_step(params, opt_state, batch):
+        def lf(p):
+            return model.loss_fn(cfg, p, batch["tokens"], batch["labels"],
+                                 batch.get("prefix_emb"), remat=remat,
+                                 unroll=unroll)
+        loss, grads = jax.value_and_grad(lf)(params)
+        if grad_compressor is not None:
+            grads = grad_compressor(grads)
+        params, opt_state = adamw.apply(params, grads, opt_state, opt_cfg)
+        return params, opt_state, loss
+
+    return train_step
+
+
+def abstract_train_state(cfg: ArchConfig,
+                         opt_cfg: Optional[adamw.AdamWConfig] = None):
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+    params = model.abstract_params(cfg)
+    opt_state = jax.eval_shape(functools.partial(adamw.init, cfg=opt_cfg), params)
+    return params, opt_state
+
+
+def train_shardings(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh,
+                    opt_cfg: Optional[adamw.AdamWConfig] = None):
+    params, opt_state = abstract_train_state(cfg, opt_cfg)
+    p_sh = sharding.param_shardings(params, mesh)
+    o_sh = sharding.opt_shardings(opt_state, params, mesh)
+    b_sh = batch_shardings(cfg, shape, mesh)
+    return (p_sh, o_sh, b_sh), (p_sh, o_sh, NamedSharding(mesh, P()))
+
+
+# --------------------------------------------------------------------------
+# prefill / serve
+# --------------------------------------------------------------------------
+
+
+def build_prefill_step(cfg: ArchConfig, unroll: bool = False):
+    def prefill_step(params, batch):
+        x = model.embed_inputs(cfg, params, batch["tokens"],
+                               batch.get("prefix_emb"))
+        x = model._layer_stack(cfg, params, x, remat=False, unroll=unroll)
+        from repro.models import layers
+        x = layers.apply_norm(cfg.norm, x, params["ln_f"])
+        x_last = x[:, -1:]
+        head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+        return x_last @ head          # (B, 1, vocab) next-token logits
+
+    return prefill_step
+
+
+def build_serve_step(cfg: ArchConfig, unroll: bool = False):
+    def serve_step(params, cache, batch):
+        logits, cache = model.decode_step(cfg, params, cache, batch["tokens"],
+                                          unroll=unroll)
+        return logits, cache
+
+    return serve_step
+
+
+def serve_shardings(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh):
+    params = model.abstract_params(cfg)
+    p_sh = sharding.param_shardings(params, mesh)
+    cspec = sharding.cache_spec(mesh, cfg, shape.global_batch)
+    c_sh = {k: NamedSharding(mesh, v) for k, v in cspec.items()}
+    b_sh = batch_shardings(cfg, shape, mesh)
+    lg_sh = NamedSharding(mesh, P())
+    return (p_sh, c_sh, b_sh), (lg_sh, c_sh)
+
+
+def abstract_cache(cfg: ArchConfig, shape: ShapeSpec):
+    return model.init_cache(cfg, shape.global_batch, shape.seq_len,
+                            abstract=True)
+
+
+_PARAM_CACHE: Dict[str, Any] = {}
+
+
+def abstract_params_cached(cfg: ArchConfig):
+    if cfg.name not in _PARAM_CACHE:
+        _PARAM_CACHE[cfg.name] = model.abstract_params(cfg)
+    return _PARAM_CACHE[cfg.name]

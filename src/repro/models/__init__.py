@@ -1,0 +1,2 @@
+# Decoder-LM model stack covering the 10 assigned architectures
+# (dense / GQA / qk-norm / MoE / RWKV6 / Mamba2-hybrid / modality-stub).

@@ -1,0 +1,211 @@
+"""GQA attention: flash-style chunked causal for train/prefill, cached decode.
+
+Memory-safe full-sequence attention: online-softmax scan over KV chunks so
+the (S, S) score matrix is never materialized — the (B, H, Sq, KV_CHUNK)
+partial is the largest intermediate.  Causal block skipping (computing only
+KV chunks <= the diagonal) is applied per Q chunk via masking of whole
+chunks; see EXPERIMENTS.md §Perf for the block-skip optimization history.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.models import layers
+
+KV_CHUNK = 1024
+Q_CHUNK = 2048
+
+NEG_INF = -1e30
+
+
+def _divisor_chunk(n: int, target: int) -> int:
+    """Largest divisor of n that is <= target (handles prefix-extended
+    sequence lengths like 32768+256 that aren't powers of two)."""
+    d = min(n, target)
+    while n % d:
+        d -= 1
+    return d
+
+
+def init_attn(key, d: int, n_heads: int, n_kv: int, head_dim: int,
+              qk_norm: bool, dtype):
+    kq, kk, kv, ko, kn = jax.random.split(key, 5)
+    s = float(1.0 / np.sqrt(d))
+    p = {
+        "wq": jax.random.normal(kq, (d, n_heads * head_dim), dtype) * s,
+        "wk": jax.random.normal(kk, (d, n_kv * head_dim), dtype) * s,
+        "wv": jax.random.normal(kv, (d, n_kv * head_dim), dtype) * s,
+        "wo": jax.random.normal(ko, (n_heads * head_dim, d), dtype)
+              * float(1.0 / np.sqrt(n_heads * head_dim)),
+    }
+    if qk_norm:
+        p["q_norm"] = jnp.ones((head_dim,), dtype)
+        p["k_norm"] = jnp.ones((head_dim,), dtype)
+    return p
+
+
+def _project_qkv(p, x, n_heads, n_kv, head_dim, qk_norm, positions, rope_theta):
+    B, S, _ = x.shape
+    q = (x @ p["wq"]).reshape(B, S, n_heads, head_dim)
+    k = (x @ p["wk"]).reshape(B, S, n_kv, head_dim)
+    v = (x @ p["wv"]).reshape(B, S, n_kv, head_dim)
+    if qk_norm:
+        q = layers.rmsnorm(q, p["q_norm"])
+        k = layers.rmsnorm(k, p["k_norm"])
+    q = layers.apply_rope(q, positions, rope_theta)
+    k = layers.apply_rope(k, positions, rope_theta)
+    return q, k, v
+
+
+def _attend_chunk(carry, q32, kci, vci, kv_pos, q_pos, causal):
+    """One (q-chunk, kv-chunk) online-softmax update."""
+    m, l, acc = carry
+    s = jnp.einsum("bhqd,bhkd->bhqk", q32, kci.astype(jnp.float32))
+    if causal:
+        mask = q_pos[:, None] >= kv_pos[None, :]
+        s = jnp.where(mask[None, None], s, NEG_INF)
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    p_ = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m - m_new)
+    l_new = l * corr + jnp.sum(p_, axis=-1)
+    acc_new = acc * corr[..., None] + jnp.einsum(
+        "bhqk,bhkd->bhqd", p_, vci.astype(jnp.float32))
+    return m_new, l_new, acc_new
+
+
+def _flash_qchunk(q, k, v, q_start, causal: bool, block_skip: bool,
+                  unroll: bool):
+    """Online-softmax over KV chunks for one Q chunk.
+
+    q: (B, H, Sq, hd); k/v: (B, H, Skv, hd) (already GQA-expanded).
+    q_start: absolute int position of q[0] (for causal masking).
+
+    block_skip (beyond-paper perf, see EXPERIMENTS.md §Perf): with
+    unroll=True, KV chunks strictly in the future of this Q chunk are not
+    even lowered — real triangular FLOP saving with static shapes (only
+    possible because the chunk loop is a python loop).
+    """
+    B, H, Sq, hd = q.shape
+    Skv = k.shape[2]
+    kv_chunk = _divisor_chunk(Skv, KV_CHUNK)
+    n_kv_chunks = Skv // kv_chunk
+    scale = 1.0 / np.sqrt(hd)
+    kc = k.reshape(B, H, n_kv_chunks, kv_chunk, hd)
+    vc = v.reshape(B, H, n_kv_chunks, kv_chunk, hd)
+    q32 = q.astype(jnp.float32) * scale
+    q_pos = q_start + jnp.arange(Sq)
+
+    init = (jnp.full((B, H, Sq), NEG_INF, jnp.float32),
+            jnp.zeros((B, H, Sq), jnp.float32),
+            jnp.zeros((B, H, Sq, hd), jnp.float32))
+
+    if unroll:
+        n_live = n_kv_chunks
+        if causal and block_skip:
+            # chunks fully in the future contribute nothing: drop them
+            n_live = min(n_kv_chunks, (q_start + Sq - 1) // kv_chunk + 1)
+        carry = init
+        for ci in range(n_live):
+            kv_pos = ci * kv_chunk + jnp.arange(kv_chunk)
+            carry = _attend_chunk(carry, q32, kc[:, :, ci], vc[:, :, ci],
+                                  kv_pos, q_pos, causal)
+        m, l, acc = carry
+    else:
+        def step(carry, inputs):
+            kci, vci, c_idx = inputs
+            kv_pos = c_idx * kv_chunk + jnp.arange(kv_chunk)
+            new = _attend_chunk(carry, q32, kci, vci, kv_pos, q_pos, causal)
+            if causal and block_skip:
+                live = (c_idx * kv_chunk) <= (q_start + Sq - 1)
+                new = jax.tree.map(lambda a, b: jnp.where(live, a, b),
+                                   new, carry)
+            return new, None
+
+        carry, _ = lax.scan(
+            step, init,
+            (kc.transpose(2, 0, 1, 3, 4), vc.transpose(2, 0, 1, 3, 4),
+             jnp.arange(n_kv_chunks)))
+        m, l, acc = carry
+    return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+
+
+def attention(p, x: jnp.ndarray, *, n_heads: int, n_kv: int, head_dim: int,
+              qk_norm: bool = False, rope_theta: float = 10000.0,
+              causal: bool = True, block_skip: bool = True,
+              unroll: bool = False) -> jnp.ndarray:
+    """Full-sequence attention (training / prefill). x: (B, S, D).
+
+    unroll=True replaces the chunk scans with python loops: exact HLO cost
+    accounting for the dry-run probes AND enables true triangular skipping.
+    """
+    B, S, D = x.shape
+    positions = jnp.arange(S)[None, :].astype(jnp.int32)
+    q, k, v = _project_qkv(p, x, n_heads, n_kv, head_dim, qk_norm,
+                           positions, rope_theta)
+    rep = n_heads // n_kv
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    q = q.transpose(0, 2, 1, 3)   # (B, H, S, hd)
+    k = k.transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+    if S <= Q_CHUNK:
+        o = _flash_qchunk(q, k, v, 0, causal, block_skip, unroll)
+    else:
+        q_chunk = _divisor_chunk(S, Q_CHUNK)
+        nq = S // q_chunk
+        if unroll:
+            outs = []
+            for i in range(nq):
+                qc = q[:, :, i * q_chunk:(i + 1) * q_chunk]
+                outs.append(_flash_qchunk(qc, k, v, i * q_chunk, causal,
+                                          block_skip, True))
+            o = jnp.concatenate(outs, axis=2)
+        else:
+            qs = q.reshape(B, n_heads, nq, q_chunk, head_dim).transpose(
+                2, 0, 1, 3, 4)
+
+            def one(t):
+                qc, idx = t
+                return _flash_qchunk(qc, k, v, idx * q_chunk, causal,
+                                     block_skip, False)
+
+            o = lax.map(one, (qs, jnp.arange(nq)))
+            o = o.transpose(1, 2, 0, 3, 4).reshape(B, n_heads, S, head_dim)
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, n_heads * head_dim)
+    return o @ p["wo"]
+
+
+def decode_attention(p, x: jnp.ndarray, cache_k: jnp.ndarray,
+                     cache_v: jnp.ndarray, pos, *, n_heads: int,
+                     n_kv: int, head_dim: int, qk_norm: bool = False,
+                     rope_theta: float = 10000.0):
+    """Single-token decode. x: (B, 1, D); cache: (B, Smax, n_kv, hd).
+
+    Returns (out (B,1,D), new_cache_k, new_cache_v).
+    """
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k, v = _project_qkv(p, x, n_heads, n_kv, head_dim, qk_norm,
+                           positions, rope_theta)
+    cache_k = lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype),
+                                       (0, pos, 0, 0))
+    cache_v = lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype),
+                                       (0, pos, 0, 0))
+    Smax = cache_k.shape[1]
+    rep = n_heads // n_kv
+    # scores against the full cache, masked beyond pos
+    q_ = q.reshape(B, n_kv, rep, head_dim)                     # (B, kv, rep, hd)
+    s = jnp.einsum("bkrd,bskd->bkrs", q_.astype(jnp.float32),
+                   cache_k.astype(jnp.float32)) / np.sqrt(head_dim)
+    mask = (jnp.arange(Smax) <= pos)[None, None, None, :]
+    s = jnp.where(mask, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkrs,bskd->bkrd", w, cache_v.astype(jnp.float32))
+    o = o.reshape(B, 1, n_heads * head_dim).astype(x.dtype)
+    return o @ p["wo"], cache_k, cache_v

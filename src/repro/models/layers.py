@@ -1,0 +1,101 @@
+"""Shared layers: norms, rotary, MLPs, embeddings (pure functional JAX)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Activation registry -------------------------------------------------------
+
+
+def act_fn(name: str):
+    return {
+        "gelu": jax.nn.gelu,
+        "silu": jax.nn.silu,
+        "relu2": lambda x: jnp.square(jax.nn.relu(x)),
+    }[name]
+
+
+# Norms ----------------------------------------------------------------------
+
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(jnp.square(x), axis=-1, keepdims=True) + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+def ln_nonparam(x: jnp.ndarray, _unused=None, eps: float = 1e-5) -> jnp.ndarray:
+    """OLMo's non-parametric LayerNorm (no scale/bias)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps)).astype(dt)
+
+
+def norm_fn(kind: str):
+    return {"rmsnorm": rmsnorm, "ln_nonparam": ln_nonparam}[kind]
+
+
+def norm_params(kind: str, d: int, dtype) -> jnp.ndarray | None:
+    if kind == "rmsnorm":
+        return jnp.ones((d,), dtype)
+    return jnp.zeros((0,), dtype)  # non-parametric: placeholder leaf
+
+
+def apply_norm(kind: str, x, p):
+    if kind == "rmsnorm":
+        return rmsnorm(x, p)
+    return ln_nonparam(x)
+
+
+# Rotary ---------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10000.0) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta), jnp.float32)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# MLPs -----------------------------------------------------------------------
+
+
+def init_mlp(key, d: int, f: int, act: str, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = float(1.0 / np.sqrt(d))
+    s_out = float(1.0 / np.sqrt(f))
+    p = {"w_up": jax.random.normal(k1, (d, f), dtype) * s_in,
+         "w_down": jax.random.normal(k2, (f, d), dtype) * s_out}
+    if act == "swiglu":
+        p["w_gate"] = jax.random.normal(k3, (d, f), dtype) * s_in
+    return p
+
+
+def mlp(p, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    up = x @ p["w_up"]
+    if act == "swiglu":
+        up = jax.nn.silu(x @ p["w_gate"]) * up
+    else:
+        up = act_fn(act)(up)
+    return up @ p["w_down"]
+
+
+# Embedding ------------------------------------------------------------------
+
+
+def init_embed(key, vocab: int, d: int, dtype):
+    return jax.random.normal(key, (vocab, d), dtype) * 0.02

@@ -1,0 +1,429 @@
+"""Model assembly: params init, full-seq forward, cached decode step.
+
+One functional decoder-LM covering the 10 assigned archs:
+  * dense GQA transformers (optionally qk_norm, non-param LN, relu^2/gelu)
+  * MoE transformers (token-choice top-k + optional shared experts)
+  * RWKV6 (attention-free: wkv mixer + token-shift channel mix)
+  * Mamba2 hybrids (zamba2: SSD blocks + ONE shared attn+MLP block applied
+    every `attn_every` layers, weights reused)
+  * modality stubs (musicgen/paligemma): precomputed prefix embeddings are
+    concatenated in front of the token embeddings (`input_specs()` supplies
+    them as ShapeDtypeStructs for the dry-run).
+
+Layers are stacked on a leading axis and driven by `lax.scan` (+ optional
+remat) so the HLO stays compact for the 94-layer MoE / 61-layer 1T configs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.distributed import sharding
+from repro.models import attention, layers, moe, ssm
+
+DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+
+def _init_block(cfg: ArchConfig, key) -> Dict[str, Any]:
+    dt = DTYPES[cfg.dtype]
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"ln1": layers.norm_params(cfg.norm, d, dt)}
+    if cfg.mixer == "attn":
+        p["attn"] = attention.init_attn(k1, d, cfg.n_heads, cfg.n_kv, cfg.hd,
+                                        cfg.qk_norm, dt)
+        p["ln2"] = layers.norm_params(cfg.norm, d, dt)
+        if cfg.is_moe:
+            p["moe"] = moe.init_moe(k2, d, f, cfg.n_experts,
+                                    cfg.n_shared_experts, cfg.act, dt)
+        else:
+            p["mlp"] = layers.init_mlp(k2, d, f, cfg.act, dt)
+    elif cfg.mixer == "rwkv6":
+        p["rwkv"] = ssm.init_rwkv6(k1, d, cfg.n_heads, dt)
+        p["ln2"] = layers.norm_params(cfg.norm, d, dt)
+        p["cmix"] = ssm.init_rwkv6_channel_mix(k2, d, f, dt)
+    elif cfg.mixer == "mamba2":
+        p["mamba"] = ssm.init_mamba2(k1, d, head_dim=cfg.hd,
+                                     ssm_state=cfg.ssm_state, dtype=dt)
+    return p
+
+
+def init_params(cfg: ArchConfig, key) -> Dict[str, Any]:
+    dt = DTYPES[cfg.dtype]
+    d = cfg.d_model
+    ke, kb, kh, ks = jax.random.split(key, 4)
+    block_keys = jax.random.split(kb, cfg.n_layers)
+    params: Dict[str, Any] = {
+        "embed": layers.init_embed(ke, cfg.vocab, d, dt),
+        "blocks": jax.vmap(lambda k: _init_block(cfg, k))(block_keys),
+        "ln_f": layers.norm_params(cfg.norm, d, dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = jax.random.normal(kh, (d, cfg.vocab), dt) * float(1.0 / np.sqrt(d))
+    if cfg.attn_every:  # zamba2 shared transformer block
+        k1, k2 = jax.random.split(ks)
+        params["shared_block"] = {
+            "ln1": layers.norm_params(cfg.norm, d, dt),
+            "attn": attention.init_attn(k1, d, cfg.n_heads, cfg.n_kv, cfg.hd,
+                                        cfg.qk_norm, dt),
+            "ln2": layers.norm_params(cfg.norm, d, dt),
+            "mlp": layers.init_mlp(k2, d, cfg.d_ff, "swiglu", dt),
+        }
+    return params
+
+
+def abstract_params(cfg: ArchConfig):
+    """ShapeDtypeStruct tree — no allocation (dry-run path)."""
+    return jax.eval_shape(
+        functools.partial(init_params, cfg), jax.random.key(0))
+
+
+# --------------------------------------------------------------------------
+# full-sequence forward (train / prefill)
+# --------------------------------------------------------------------------
+
+
+def _block_fwd(cfg: ArchConfig, p, x, shared_block, layer_idx,
+               unroll: bool = False):
+    if cfg.mixer == "attn":
+        h = layers.apply_norm(cfg.norm, x, p["ln1"])
+        x = x + attention.attention(
+            p["attn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.hd,
+            qk_norm=cfg.qk_norm, rope_theta=cfg.rope_theta, unroll=unroll,
+            block_skip=cfg.block_skip)
+        h = layers.apply_norm(cfg.norm, x, p["ln2"])
+        if cfg.is_moe:
+            x = x + moe.moe_ffn(
+                p["moe"], h, n_experts=cfg.n_experts, top_k=cfg.top_k,
+                capacity_factor=cfg.capacity_factor, act=cfg.act)
+        else:
+            x = x + layers.mlp(p["mlp"], h, cfg.act)
+    elif cfg.mixer == "rwkv6":
+        h = layers.apply_norm(cfg.norm, x, p["ln1"])
+        o, _ = ssm.rwkv6_mix(p["rwkv"], h, n_heads=cfg.n_heads)
+        x = x + o
+        h = layers.apply_norm(cfg.norm, x, p["ln2"])
+        x = x + ssm.rwkv6_channel_mix(p["cmix"], h)
+    elif cfg.mixer == "mamba2":
+        h = layers.apply_norm(cfg.norm, x, p["ln1"])
+        o, _ = ssm.mamba2_mix(p["mamba"], h, head_dim=cfg.hd,
+                              ssm_state=cfg.ssm_state, ssd_chunk=cfg.ssd_chunk,
+                              unroll=unroll)
+        x = x + o
+        if cfg.attn_every:
+            def apply_shared(x):
+                sb = shared_block
+                h = layers.apply_norm(cfg.norm, x, sb["ln1"])
+                x = x + attention.attention(
+                    sb["attn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+                    head_dim=cfg.hd, rope_theta=cfg.rope_theta, unroll=unroll,
+                    block_skip=cfg.block_skip)
+                h = layers.apply_norm(cfg.norm, x, sb["ln2"])
+                return x + layers.mlp(sb["mlp"], h, "swiglu")
+            if isinstance(layer_idx, int):      # python-unrolled layer loop
+                if (layer_idx + 1) % cfg.attn_every == 0:
+                    x = apply_shared(x)
+            else:
+                x = lax.cond((layer_idx + 1) % cfg.attn_every == 0,
+                             apply_shared, lambda x: x, x)
+    return x
+
+
+def _layer_stack(cfg: ArchConfig, params, x, remat: bool, unroll: bool):
+    """Apply all blocks: lax.scan over stacked params, or a python loop
+    (unroll=True — exact HLO cost accounting for the dry-run probes)."""
+    shared = params.get("shared_block")
+    if unroll:
+        body = _block_fwd
+        if remat:
+            body = jax.checkpoint(_block_fwd, static_argnums=(0, 4, 5))
+        for i in range(cfg.n_layers):
+            p_i = jax.tree.map(lambda a: a[i], params["blocks"])
+            x = body(cfg, p_i, x, shared, i, True)
+            x = sharding.constrain(x, "dp", None, None)
+        return x
+
+    def body(x, scanned):
+        p, idx = scanned
+        x = _block_fwd(cfg, p, x, shared, idx)
+        x = sharding.constrain(x, "dp", None, None)
+        return x, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = lax.scan(body, x, (params["blocks"],
+                              jnp.arange(cfg.n_layers, dtype=jnp.int32)))
+    return x
+
+
+def embed_inputs(cfg: ArchConfig, params, tokens, prefix_emb=None):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = sharding.constrain(x, "dp", None, None)
+    if cfg.n_prefix and prefix_emb is not None:
+        x = jnp.concatenate([prefix_emb.astype(x.dtype), x], axis=1)
+    return x
+
+
+def forward(cfg: ArchConfig, params, tokens: jnp.ndarray,
+            prefix_emb: Optional[jnp.ndarray] = None,
+            remat: bool = False, unroll: bool = False) -> jnp.ndarray:
+    """tokens: (B, S) int32 -> logits (B, S(+prefix), vocab)."""
+    x = embed_inputs(cfg, params, tokens, prefix_emb)
+    x = _layer_stack(cfg, params, x, remat, unroll)
+    x = layers.apply_norm(cfg.norm, x, params["ln_f"])
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    return x @ head
+
+
+def loss_fn(cfg: ArchConfig, params, tokens, labels, prefix_emb=None,
+            remat: bool = True, seq_chunk: int = 512, unroll: bool = False):
+    """Next-token cross entropy, computed over sequence chunks so the f32
+    (B, S, vocab) softmax intermediate never materializes whole."""
+    x = embed_inputs(cfg, params, tokens, prefix_emb)
+    x = _layer_stack(cfg, params, x, remat, unroll)
+    x = layers.apply_norm(cfg.norm, x, params["ln_f"])
+    if cfg.n_prefix:
+        x = x[:, cfg.n_prefix:]
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+
+    B, S, D = x.shape
+    n_chunks = max(1, S // seq_chunk)
+    xs = x.reshape(B, n_chunks, S // n_chunks, D).transpose(1, 0, 2, 3)
+    ls = labels.reshape(B, n_chunks, S // n_chunks).transpose(1, 0, 2)
+
+    def chunk_loss(carry, inp):
+        xc, lc = inp
+        logits = (xc @ head).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(logz - gold), None
+
+    if unroll:
+        total = jnp.float32(0.0)
+        for i in range(n_chunks):
+            total, _ = chunk_loss(total, (xs[i], ls[i]))
+    else:
+        total, _ = lax.scan(chunk_loss, jnp.float32(0.0), (xs, ls))
+    return total / (B * S)
+
+
+# --------------------------------------------------------------------------
+# cached decode
+# --------------------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
+               abstract: bool = False) -> Dict[str, Any]:
+    """KV / recurrent-state cache. Shapes only if abstract=True."""
+    dt = DTYPES[cfg.dtype]
+    L, d = cfg.n_layers, cfg.d_model
+    mk = (jax.ShapeDtypeStruct if abstract
+          else lambda s, t: jnp.zeros(s, t))
+    cache: Dict[str, Any] = {"pos": (jax.ShapeDtypeStruct((), jnp.int32)
+                                     if abstract else jnp.int32(0))}
+    if cfg.mixer == "attn":
+        cache["k"] = mk((L, batch, max_seq, cfg.n_kv, cfg.hd), dt)
+        cache["v"] = mk((L, batch, max_seq, cfg.n_kv, cfg.hd), dt)
+    elif cfg.mixer == "rwkv6":
+        H, hd = cfg.n_heads, d // cfg.n_heads
+        cache["wkv"] = mk((L, batch, H, hd, hd), jnp.float32)
+        cache["x_att"] = mk((L, batch, d), dt)
+        cache["x_ffn"] = mk((L, batch, d), dt)
+    elif cfg.mixer == "mamba2":
+        di = 2 * d
+        H = di // cfg.hd
+        cache["ssm"] = mk((L, batch, H, cfg.hd, cfg.ssm_state), jnp.float32)
+        cache["conv"] = mk((L, batch, ssm.CONV_K - 1, di), dt)
+        if cfg.attn_every:
+            n_apps = cfg.n_layers // cfg.attn_every
+            cache["k"] = mk((n_apps, batch, max_seq, cfg.n_kv, cfg.hd), dt)
+            cache["v"] = mk((n_apps, batch, max_seq, cfg.n_kv, cfg.hd), dt)
+    return cache
+
+
+def decode_step(cfg: ArchConfig, params, cache: Dict[str, Any],
+                tokens: jnp.ndarray,
+                unroll: bool = False) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """One decode step. tokens: (B, 1) -> (logits (B, 1, vocab), cache).
+
+    unroll=True: python layer loop (exact dry-run probe accounting)."""
+    if unroll:
+        return _decode_step_unrolled(cfg, params, cache, tokens)
+    pos = cache["pos"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = sharding.constrain(x, "dp", None, None)
+    shared = params.get("shared_block")
+    L = cfg.n_layers
+
+    if cfg.mixer == "attn":
+        def body(carry, scanned):
+            x = carry
+            p, ck, cv = scanned
+            h = layers.apply_norm(cfg.norm, x, p["ln1"])
+            o, ck, cv = attention.decode_attention(
+                p["attn"], h, ck, cv, pos, n_heads=cfg.n_heads,
+                n_kv=cfg.n_kv, head_dim=cfg.hd, qk_norm=cfg.qk_norm,
+                rope_theta=cfg.rope_theta)
+            x = x + o
+            h = layers.apply_norm(cfg.norm, x, p["ln2"])
+            if cfg.is_moe:
+                x = x + moe.moe_ffn(p["moe"], h, n_experts=cfg.n_experts,
+                                    top_k=cfg.top_k,
+                                    capacity_factor=cfg.capacity_factor,
+                                    act=cfg.act,
+                                    decode_global=cfg.moe_decode_global)
+            else:
+                x = x + layers.mlp(p["mlp"], h, cfg.act)
+            return x, (ck, cv)
+
+        x, (ks, vs) = lax.scan(body, x, (params["blocks"], cache["k"], cache["v"]))
+        cache = dict(cache, k=ks, v=vs)
+
+    elif cfg.mixer == "rwkv6":
+        def body(carry, scanned):
+            x = carry
+            p, wkv, xa, xf = scanned
+            h = layers.apply_norm(cfg.norm, x, p["ln1"])
+            o, (wkv, xa_new) = ssm.rwkv6_mix(p["rwkv"], h,
+                                             n_heads=cfg.n_heads,
+                                             state=(wkv, xa))
+            x = x + o
+            h = layers.apply_norm(cfg.norm, x, p["ln2"])
+            o, xf_new = ssm.rwkv6_channel_mix(p["cmix"], h, x_last=xf)
+            x = x + o
+            return x, (wkv, xa_new, xf_new)
+
+        x, (wkvs, xas, xfs) = lax.scan(
+            body, x, (params["blocks"], cache["wkv"], cache["x_att"],
+                      cache["x_ffn"]))
+        cache = dict(cache, wkv=wkvs, x_att=xas, x_ffn=xfs)
+
+    elif cfg.mixer == "mamba2":
+        n_apps = max(1, cfg.n_layers // cfg.attn_every) if cfg.attn_every else 0
+
+        def body(carry, scanned):
+            x, ak, av = carry
+            p, hst, cst, idx = scanned
+            h = layers.apply_norm(cfg.norm, x, p["ln1"])
+            o, (hst, cst) = ssm.mamba2_mix(p["mamba"], h, head_dim=cfg.hd,
+                                           ssm_state=cfg.ssm_state,
+                                           state=(hst, cst))
+            x = x + o
+            if cfg.attn_every:
+                app = idx // cfg.attn_every
+
+                def apply_shared(args):
+                    x, ak, av = args
+                    sb = shared
+                    h = layers.apply_norm(cfg.norm, x, sb["ln1"])
+                    ck = lax.dynamic_index_in_dim(ak, app, 0, keepdims=False)
+                    cv = lax.dynamic_index_in_dim(av, app, 0, keepdims=False)
+                    o, ck, cv = attention.decode_attention(
+                        sb["attn"], h, ck, cv, pos, n_heads=cfg.n_heads,
+                        n_kv=cfg.n_kv, head_dim=cfg.hd,
+                        rope_theta=cfg.rope_theta)
+                    x = x + o
+                    h = layers.apply_norm(cfg.norm, x, sb["ln2"])
+                    x = x + layers.mlp(sb["mlp"], h, "swiglu")
+                    ak = lax.dynamic_update_index_in_dim(ak, ck, app, 0)
+                    av = lax.dynamic_update_index_in_dim(av, cv, app, 0)
+                    return x, ak, av
+
+                x, ak, av = lax.cond((idx + 1) % cfg.attn_every == 0,
+                                     apply_shared, lambda a: a, (x, ak, av))
+            return (x, ak, av), (hst, cst)
+
+        ak0 = cache.get("k", jnp.zeros((1, 1, 1, 1, 1), DTYPES[cfg.dtype]))
+        av0 = cache.get("v", jnp.zeros((1, 1, 1, 1, 1), DTYPES[cfg.dtype]))
+        (x, ak, av), (hsts, csts) = lax.scan(
+            body, (x, ak0, av0),
+            (params["blocks"], cache["ssm"], cache["conv"],
+             jnp.arange(L, dtype=jnp.int32)))
+        cache = dict(cache, ssm=hsts, conv=csts)
+        if cfg.attn_every:
+            cache = dict(cache, k=ak, v=av)
+
+    x = layers.apply_norm(cfg.norm, x, params["ln_f"])
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = x @ head
+    cache = dict(cache, pos=pos + 1)
+    return logits, cache
+
+
+def _decode_step_unrolled(cfg: ArchConfig, params, cache, tokens):
+    """Python-layer-loop decode (dry-run probe path; numerics identical)."""
+    pos = cache["pos"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = sharding.constrain(x, "dp", None, None)
+    shared = params.get("shared_block")
+    new_cache = dict(cache)
+
+    for i in range(cfg.n_layers):
+        p = jax.tree.map(lambda a: a[i], params["blocks"])
+        h = layers.apply_norm(cfg.norm, x, p["ln1"])
+        if cfg.mixer == "attn":
+            o, ck, cv = attention.decode_attention(
+                p["attn"], h, new_cache["k"][i], new_cache["v"][i], pos,
+                n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.hd,
+                qk_norm=cfg.qk_norm, rope_theta=cfg.rope_theta)
+            new_cache["k"] = new_cache["k"].at[i].set(ck)
+            new_cache["v"] = new_cache["v"].at[i].set(cv)
+            x = x + o
+            h = layers.apply_norm(cfg.norm, x, p["ln2"])
+            if cfg.is_moe:
+                x = x + moe.moe_ffn(p["moe"], h, n_experts=cfg.n_experts,
+                                    top_k=cfg.top_k,
+                                    capacity_factor=cfg.capacity_factor,
+                                    act=cfg.act,
+                                    decode_global=cfg.moe_decode_global)
+            else:
+                x = x + layers.mlp(p["mlp"], h, cfg.act)
+        elif cfg.mixer == "rwkv6":
+            o, (wkv, xa) = ssm.rwkv6_mix(
+                p["rwkv"], h, n_heads=cfg.n_heads,
+                state=(new_cache["wkv"][i], new_cache["x_att"][i]))
+            new_cache["wkv"] = new_cache["wkv"].at[i].set(wkv)
+            new_cache["x_att"] = new_cache["x_att"].at[i].set(xa)
+            x = x + o
+            h = layers.apply_norm(cfg.norm, x, p["ln2"])
+            o, xf = ssm.rwkv6_channel_mix(p["cmix"], h,
+                                          x_last=new_cache["x_ffn"][i])
+            new_cache["x_ffn"] = new_cache["x_ffn"].at[i].set(xf)
+            x = x + o
+        elif cfg.mixer == "mamba2":
+            o, (hst, cst) = ssm.mamba2_mix(
+                p["mamba"], h, head_dim=cfg.hd, ssm_state=cfg.ssm_state,
+                state=(new_cache["ssm"][i], new_cache["conv"][i]))
+            new_cache["ssm"] = new_cache["ssm"].at[i].set(hst)
+            new_cache["conv"] = new_cache["conv"].at[i].set(cst)
+            x = x + o
+            if cfg.attn_every and (i + 1) % cfg.attn_every == 0:
+                app = i // cfg.attn_every
+                sb = shared
+                h = layers.apply_norm(cfg.norm, x, sb["ln1"])
+                o, ck, cv = attention.decode_attention(
+                    sb["attn"], h, new_cache["k"][app], new_cache["v"][app],
+                    pos, n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.hd,
+                    rope_theta=cfg.rope_theta)
+                new_cache["k"] = new_cache["k"].at[app].set(ck)
+                new_cache["v"] = new_cache["v"].at[app].set(cv)
+                x = x + o
+                h = layers.apply_norm(cfg.norm, x, sb["ln2"])
+                x = x + layers.mlp(sb["mlp"], h, "swiglu")
+
+    x = layers.apply_norm(cfg.norm, x, params["ln_f"])
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = x @ head
+    new_cache["pos"] = pos + 1
+    return logits, new_cache

@@ -1,0 +1,146 @@
+"""Token-choice top-k MoE with capacity, sort-based dispatch, EP over 'model'.
+
+Sharding strategy (DESIGN.md §5): activations entering the MoE block are
+sharded over the DP axes and *replicated* over 'model'; expert weights are
+sharded on the expert dimension over 'model'.  Tokens are first reshaped
+into (G, T_loc, D) where G = number of DP shards, and the whole dispatch
+(top-k, sort, capacity) is vmapped over G — every routing op is then local
+to its DP shard (no cross-device sort).  Each model shard gathers the
+tokens routed to ITS local experts from its local token copy, runs the
+expert FFNs, scatters partial outputs, and one psum over 'model' combines
+them — the collective volume of a tensor-parallel MLP, no all-to-all.
+
+Dispatch is the static-shape sort trick: argsort expert ids -> rank within
+expert -> (E, C) token-index table with capacity-overflow drop.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed import sharding
+from repro.models import layers
+
+
+def init_moe(key, d: int, f_expert: int, n_experts: int, n_shared: int,
+             act: str, dtype):
+    ks = jax.random.split(key, 5)
+    s_in = float(1.0 / np.sqrt(d))
+    s_out = float(1.0 / np.sqrt(f_expert))
+    p = {
+        "router": jax.random.normal(ks[0], (d, n_experts), dtype) * s_in,
+        "w_up": jax.random.normal(ks[1], (n_experts, d, f_expert), dtype) * s_in,
+        "w_gate": jax.random.normal(ks[2], (n_experts, d, f_expert), dtype) * s_in,
+        "w_down": jax.random.normal(ks[3], (n_experts, f_expert, d), dtype) * s_out,
+    }
+    if n_shared:
+        p["shared"] = layers.init_mlp(ks[4], d, f_expert * n_shared, act, dtype)
+    return p
+
+
+def _dispatch_group(xt, router, E: int, K: int, C: int):
+    """Per-DP-group dispatch. xt: (T, D) -> (token_of_slot, gate_of_slot)."""
+    T = xt.shape[0]
+    logits = (xt @ router).astype(jnp.float32)               # (T, E)
+    gates, ids = jax.lax.top_k(logits, K)                    # (T, K)
+    gates = jax.nn.softmax(gates, axis=-1)
+    flat_ids = ids.reshape(-1)                               # (T*K,)
+    order = jnp.argsort(flat_ids, stable=True)               # group by expert
+    sorted_ids = flat_ids[order]
+    counts = jnp.bincount(flat_ids, length=E)
+    offsets = jnp.cumsum(counts) - counts                    # exclusive
+    rank = jnp.arange(T * K) - offsets[sorted_ids]           # rank in expert
+    keep = rank < C
+    slot = jnp.where(keep, sorted_ids * C + rank, E * C)     # OOB drop slot
+    tok = order // K
+    gate_flat = gates.reshape(-1)[order]
+    token_of_slot = jnp.full((E * C + 1,), T, jnp.int32).at[slot].set(
+        tok.astype(jnp.int32))
+    gate_of_slot = jnp.zeros((E * C + 1,), jnp.float32).at[slot].set(gate_flat)
+    return token_of_slot[:-1].reshape(E, C), gate_of_slot[:-1].reshape(E, C)
+
+
+def _expert_w(p, key, dtype=jnp.bfloat16):
+    """Expert weight fetch with on-the-fly int8 dequantization (serving
+    weight compression, §Perf hillclimb 2): quantized weights are stored as
+    {"q": int8 (E,a,b), "s": f32 (E,1,b)} and expanded at use — the memory
+    system reads 1 byte/weight instead of 2."""
+    w = p[key]
+    if isinstance(w, dict):
+        return w["q"].astype(dtype) * w["s"].astype(dtype)
+    return w
+
+
+def quantize_expert_weights(p_moe):
+    """Host/serve-time transform: per-(expert, out-channel) int8 weights."""
+    out = dict(p_moe)
+    for key in ("w_up", "w_gate", "w_down"):
+        w = p_moe[key]
+        amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=-2, keepdims=True)
+        s = amax / 127.0 + 1e-12
+        q = jnp.clip(jnp.round(w.astype(jnp.float32) / s), -127, 127
+                     ).astype(jnp.int8)
+        out[key] = {"q": q, "s": s.astype(jnp.float32)}
+    return out
+
+
+def abstract_quantize_expert_weights(p_moe):
+    """ShapeDtypeStruct version of quantize_expert_weights (dry-run)."""
+    import jax as _jax
+    out = dict(p_moe)
+    for key in ("w_up", "w_gate", "w_down"):
+        w = p_moe[key]
+        s_shape = w.shape[:-2] + (1,) + w.shape[-1:]
+        out[key] = {"q": _jax.ShapeDtypeStruct(w.shape, jnp.int8),
+                    "s": _jax.ShapeDtypeStruct(s_shape, jnp.float32)}
+    return out
+
+
+def moe_ffn(p, x: jnp.ndarray, *, n_experts: int, top_k: int,
+            capacity_factor: float = 1.25, act: str = "swiglu",
+            decode_global: bool = True) -> jnp.ndarray:
+    """x: (B, S, D) -> (B, S, D)."""
+    B, S, D = x.shape
+    E, K = n_experts, top_k
+    # Decode (S == 1): dispatch GLOBALLY (G=1).  Per-DP-group dispatch at
+    # tiny token counts pads every group to >= 8 slots on EVERY expert —
+    # ~100x redundant expert compute for a 128-token decode batch
+    # (§Perf hillclimb 2).  The token all-gather this implies is ~1 MB.
+    G = sharding.dp_groups(B) if (S > 1 or not decode_global) else 1
+    T = (B * S) // G                                         # tokens per group
+    xg_in = x.reshape(G, T, D)
+    xg_in = sharding.constrain(xg_in, "dp" if G > 1 else None, None, None)
+
+    C = int(np.ceil(T * K / E * capacity_factor))
+    C = max(8, min(C, T))
+
+    token_of_slot, gate_of_slot = jax.vmap(
+        lambda xt: _dispatch_group(xt, p["router"], E, K, C))(xg_in)
+
+    pad = jnp.zeros((G, 1, D), x.dtype)
+    xt_pad = jnp.concatenate([xg_in, pad], axis=1)           # (G, T+1, D)
+    xg = jnp.take_along_axis(
+        xt_pad.reshape(G, T + 1, D),
+        token_of_slot.reshape(G, E * C, 1).astype(jnp.int32), axis=1)
+    xg = xg.reshape(G, E, C, D)
+    if G > 1:
+        xg = sharding.constrain(xg, "dp", "model", None, None)  # EP over model
+    else:
+        xg = sharding.constrain(xg, None, "model", None, None)
+    up = jnp.einsum("gecd,edf->gecf", xg, _expert_w(p, "w_up", x.dtype))
+    gate_h = jnp.einsum("gecd,edf->gecf", xg, _expert_w(p, "w_gate", x.dtype))
+    h = jax.nn.silu(gate_h) * up
+    y = jnp.einsum("gecf,efd->gecd", h,
+                   _expert_w(p, "w_down", x.dtype))  # (G,E,C,D)
+    y = y * gate_of_slot[..., None].astype(y.dtype)
+
+    def scatter_group(tos, yg):
+        return jnp.zeros((T + 1, D), y.dtype).at[tos.reshape(-1)].add(
+            yg.reshape(E * C, D))[:T]
+
+    out = jax.vmap(scatter_group)(token_of_slot, y)          # (G, T, D)
+    out = sharding.constrain(out, "dp", None, None)
+    if "shared" in p:
+        out = out + layers.mlp(p["shared"], xg_in, act)
+    return out.reshape(B, S, D).astype(x.dtype)

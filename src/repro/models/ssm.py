@@ -1,0 +1,265 @@
+"""Recurrent token mixers: RWKV6 (Finch) and Mamba2 (SSD), + decode steps.
+
+RWKV6 (data-dependent decay, arXiv:2404.05892), per head h with K=V=head_dim:
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+    w_t = exp(-exp(w_base + lora(x_t)))     (the data-dependent decay)
+plus token-shift interpolation on the inputs.
+
+Mamba2 / SSD (arXiv:2405.21060), per head with state N = ssm_state:
+    h_t = a_t h_{t-1} + dt_t * (x_t ⊗ B_t)
+    y_t = h_t C_t + D x_t,   a_t = exp(-dt_t * exp(A_log))
+with a short causal conv on the input path and SiLU gating (z branch).
+
+Both are implemented as chunked `lax.scan` over time (exact recurrence;
+the chunkwise-parallel form is a §Perf optimization), O(1) state for decode
+— which is why rwkv6/zamba2 are the two archs that run `long_500k`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+
+# --------------------------------------------------------------------------
+# RWKV6
+# --------------------------------------------------------------------------
+
+
+def init_rwkv6(key, d: int, n_heads: int, dtype):
+    hd = d // n_heads
+    ks = jax.random.split(key, 8)
+    s = float(1.0 / np.sqrt(d))
+    return {
+        "w_r": jax.random.normal(ks[0], (d, d), dtype) * s,
+        "w_k": jax.random.normal(ks[1], (d, d), dtype) * s,
+        "w_v": jax.random.normal(ks[2], (d, d), dtype) * s,
+        "w_g": jax.random.normal(ks[3], (d, d), dtype) * s,
+        "w_o": jax.random.normal(ks[4], (d, d), dtype) * s,
+        "w_decay": jax.random.normal(ks[5], (d, d), dtype) * s * 0.1,
+        "decay_base": jnp.zeros((d,), dtype),
+        "bonus_u": jnp.zeros((n_heads, hd), dtype),
+        "mix": jax.random.uniform(ks[6], (5, d), dtype),  # token-shift lerps
+    }
+
+
+def _token_shift(x, x_prev_last=None):
+    """shift x right by one step; x: (B, S, D). x_prev_last: (B, D) or None."""
+    if x_prev_last is None:
+        pad = jnp.zeros_like(x[:, :1])
+    else:
+        pad = x_prev_last[:, None]
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def rwkv6_mix(p, x: jnp.ndarray, *, n_heads: int, state=None):
+    """x: (B, S, D). state: optional (S_wkv (B,H,K,V), x_last (B,D)).
+
+    Returns (out (B,S,D), new_state)."""
+    B, S, D = x.shape
+    H = n_heads
+    hd = D // H
+    x_last = None if state is None else state[1]
+    xs = _token_shift(x, x_last)
+    mix = p["mix"]
+
+    def lerp(i):
+        return x + (xs - x) * mix[i]
+
+    r = (lerp(0) @ p["w_r"]).reshape(B, S, H, hd)
+    k = (lerp(1) @ p["w_k"]).reshape(B, S, H, hd)
+    v = (lerp(2) @ p["w_v"]).reshape(B, S, H, hd)
+    g = jax.nn.silu(lerp(3) @ p["w_g"])
+    decay = (p["decay_base"] + lerp(4) @ p["w_decay"]).reshape(B, S, H, hd)
+    w = jnp.exp(-jnp.exp(decay.astype(jnp.float32)))        # (B,S,H,K) in (0,1)
+    u = p["bonus_u"].astype(jnp.float32)
+
+    S0 = (jnp.zeros((B, H, hd, hd), jnp.float32) if state is None
+          else state[0])
+
+    def step(Scur, inp):
+        r_t, k_t, v_t, w_t = inp                            # (B,H,hd) each
+        kv = k_t[..., :, None] * v_t[..., None, :]          # (B,H,K,V)
+        o_t = jnp.einsum("bhk,bhkv->bhv", r_t,
+                         Scur + u[None, :, :, None] * kv)
+        Snew = w_t[..., :, None] * Scur + kv
+        return Snew, o_t
+
+    seq = (r.transpose(1, 0, 2, 3).astype(jnp.float32),
+           k.transpose(1, 0, 2, 3).astype(jnp.float32),
+           v.transpose(1, 0, 2, 3).astype(jnp.float32),
+           w.transpose(1, 0, 2, 3))
+    S_fin, o = lax.scan(step, S0, seq)                      # o: (S,B,H,V)
+    o = o.transpose(1, 0, 2, 3).reshape(B, S, D).astype(x.dtype)
+    out = (o * g) @ p["w_o"]
+    return out, (S_fin, x[:, -1])
+
+
+def init_rwkv6_channel_mix(key, d: int, f: int, dtype):
+    ks = jax.random.split(key, 3)
+    s = float(1.0 / np.sqrt(d))
+    return {
+        "w_ck": jax.random.normal(ks[0], (d, f), dtype) * s,
+        "w_cv": jax.random.normal(ks[1], (f, d), dtype) * float(1.0 / np.sqrt(f)),
+        "w_cr": jax.random.normal(ks[2], (d, d), dtype) * s,
+        "mix2": jax.random.uniform(ks[2], (2, d), dtype),
+    }
+
+
+def rwkv6_channel_mix(p, x: jnp.ndarray, x_last=None):
+    """RWKV channel mix: r ⊙ (W_v · relu(W_k · lerp_k)^2), with token-shift.
+
+    Returns out (and new x_last when called with state, for decode)."""
+    xs = _token_shift(x, x_last)
+    xk = x + (xs - x) * p["mix2"][0]
+    xr = x + (xs - x) * p["mix2"][1]
+    k = jnp.square(jax.nn.relu(xk @ p["w_ck"]))
+    out = jax.nn.sigmoid(xr @ p["w_cr"]) * (k @ p["w_cv"])
+    if x_last is None:
+        return out
+    return out, x[:, -1]
+
+
+# --------------------------------------------------------------------------
+# Mamba2 (SSD)
+# --------------------------------------------------------------------------
+
+CONV_K = 4
+
+
+def init_mamba2(key, d: int, *, head_dim: int = 64, ssm_state: int = 64,
+                expand: int = 2, dtype=jnp.bfloat16):
+    di = d * expand
+    H = di // head_dim
+    N = ssm_state
+    ks = jax.random.split(key, 6)
+    s = float(1.0 / np.sqrt(d))
+    return {
+        "in_proj": jax.random.normal(ks[0], (d, 2 * di + 2 * N + H), dtype) * s,
+        "conv_w": jax.random.normal(ks[1], (CONV_K, di), dtype) * 0.5,
+        "A_log": jnp.zeros((H,), dtype),
+        "D": jnp.ones((H,), dtype),
+        "dt_bias": jnp.zeros((H,), dtype),
+        "out_proj": jax.random.normal(ks[2], (di, d), dtype) * float(1.0 / np.sqrt(di)),
+        "norm_z": jnp.ones((di,), dtype),
+    }
+
+
+def _causal_conv(x, w, conv_state=None):
+    """depthwise causal conv, x: (B,S,C), w: (K,C). state: (B,K-1,C)."""
+    B, S, C = x.shape
+    if conv_state is None:
+        pad = jnp.zeros((B, CONV_K - 1, C), x.dtype)
+    else:
+        pad = conv_state
+    xp = jnp.concatenate([pad, x], axis=1)                   # (B, S+K-1, C)
+    out = sum(xp[:, i:i + S] * w[i] for i in range(CONV_K))
+    return out, xp[:, -(CONV_K - 1):]
+
+
+def _ssd_chunked(xin, a, Bv, Cv, dt, h0, chunk: int, unroll: bool = False):
+    """Chunkwise-parallel SSD (Mamba2 paper §6): identical recurrence, but
+    states touch memory once per CHUNK instead of once per step, and the
+    within-chunk work becomes MXU matmuls.  §Perf hillclimb 3.
+
+    xin: (B,S,H,P); a,dt: (B,S,H); Bv,Cv: (B,S,N); h0: (B,H,P,N) f32.
+    Returns (y (B,S,H,P) f32, h_fin).
+    """
+    B, S, H, P = xin.shape
+    N = Bv.shape[-1]
+    c = min(chunk, S)
+    while S % c:
+        c -= 1
+    nc = S // c
+    u = (dt[..., None] * xin.astype(jnp.float32)).reshape(B, nc, c, H, P)
+    la = jnp.log(jnp.maximum(a, 1e-30)).reshape(B, nc, c, H)
+    cum = jnp.cumsum(la, axis=2)                         # (B,nc,c,H)
+    Bc = Bv.reshape(B, nc, c, N)
+    Cc = Cv.reshape(B, nc, c, N)
+
+    # within-chunk: y_t += sum_{s<=t} exp(cum_t - cum_s) (C_t.B_s) u_s
+    scores = jnp.einsum("bktn,bksn->bkts", Cc, Bc)       # head-independent
+    ldiff = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,t,s,H)
+    mask = jnp.tril(jnp.ones((c, c), bool))
+    L = jnp.where(mask[None, None, :, :, None], jnp.exp(ldiff), 0.0)
+    y_intra = jnp.einsum("bkts,bktsh,bkshp->bkthp", scores, L, u)
+
+    # cross-chunk: carried state contributes C_t exp(cum_t) h_in;
+    # chunk state update: h_out = exp(cum_last) h_in + sum_s exp(cum_last -
+    # cum_s) u_s B_s   — ONE state read/write per chunk.
+    dec_out = jnp.exp(cum[:, :, -1:, :] - cum)           # (B,nc,c,H)
+    uB = jnp.einsum("bksh,bkshp,bksn->bkhpn", dec_out, u, Bc)
+    a_tot = jnp.exp(cum[:, :, -1])                       # (B,nc,H)
+
+    def chunk_step(h, inp):
+        uB_k, a_k, cum_k, C_k = inp
+        y_cross = jnp.einsum("btn,bhpn,bth->bthp",
+                             C_k, h, jnp.exp(cum_k))
+        h = a_k[:, :, None, None] * h + uB_k
+        return h, y_cross
+
+    seq = (uB.transpose(1, 0, 2, 3, 4), a_tot.transpose(1, 0, 2),
+           cum.transpose(1, 0, 2, 3), Cc.transpose(1, 0, 2, 3))
+    if unroll:   # python chunk loop: exact HLO cost accounting (probes)
+        h = h0
+        ys = []
+        for k in range(nc):
+            h, y_k = chunk_step(h, jax.tree.map(lambda t: t[k], seq))
+            ys.append(y_k)
+        h_fin = h
+        y_cross = jnp.stack(ys, axis=1)                  # (B,nc,c,H,P)
+        y = y_intra + y_cross
+    else:
+        h_fin, y_cross = lax.scan(chunk_step, h0, seq)   # (nc,B,c,H,P)
+        y = y_intra + y_cross.transpose(1, 0, 2, 3, 4)
+    return y.reshape(B, S, H, P), h_fin
+
+
+def mamba2_mix(p, x: jnp.ndarray, *, head_dim: int = 64, ssm_state: int = 64,
+               expand: int = 2, state=None, ssd_chunk: int = 0,
+               unroll: bool = False):
+    """x: (B,S,D). state: (ssm (B,H,P,N) f32, conv (B,K-1,di)). -> (out, state)
+
+    ssd_chunk > 0 selects the chunkwise-parallel SSD path (matmul-form,
+    state memory traffic /chunk instead of /step)."""
+    B, S, D = x.shape
+    di = D * expand
+    H = di // head_dim
+    P, N = head_dim, ssm_state
+    proj = x @ p["in_proj"]                                  # (B,S,2di+2N+H)
+    z, xin, Bmat, Cmat, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
+    conv_state = None if state is None else state[1]
+    xin, conv_new = _causal_conv(xin, p["conv_w"], conv_state)
+    xin = jax.nn.silu(xin).reshape(B, S, H, P)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = jnp.exp(-dt * jnp.exp(p["A_log"].astype(jnp.float32)))  # (B,S,H)
+    Bv = Bmat.astype(jnp.float32)                            # (B,S,N) shared heads
+    Cv = Cmat.astype(jnp.float32)
+
+    h0 = (jnp.zeros((B, H, P, N), jnp.float32) if state is None else state[0])
+
+    if ssd_chunk and S > 1:
+        y, h_fin = _ssd_chunked(xin, a, Bv, Cv, dt, h0, ssd_chunk, unroll)
+    else:
+        def step(h, inp):
+            x_t, a_t, B_t, C_t, dt_t = inp
+            upd = (dt_t[..., None, None] * x_t.astype(jnp.float32)[..., :, None]
+                   * B_t[:, None, None, :])                  # (B,H,P,N)
+            h = a_t[..., None, None] * h + upd
+            y = jnp.einsum("bhpn,bn->bhp", h, C_t)
+            return h, y
+
+        seq = (xin.transpose(1, 0, 2, 3), a.transpose(1, 0, 2),
+               Bv.transpose(1, 0, 2), Cv.transpose(1, 0, 2),
+               dt.transpose(1, 0, 2))
+        h_fin, y = lax.scan(step, h0, seq)                   # y: (S,B,H,P)
+        y = y.transpose(1, 0, 2, 3)
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xin.astype(jnp.float32)
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    from repro.models.layers import rmsnorm
+    y = rmsnorm(y, p["norm_z"])
+    return y @ p["out_proj"], (h_fin, conv_new)

@@ -1,0 +1,2 @@
+# Optimizer + gradient/optimizer-state compression (the paper's codecs
+# applied to the training data plane).

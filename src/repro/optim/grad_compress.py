@@ -1,0 +1,135 @@
+"""Gradient compression for cross-pod collectives.
+
+The paper's thesis — decompression throughput is worth engineering for —
+applied to the collective plane.  Inter-pod links (DCI) are an order of
+magnitude slower than intra-pod ICI, so the bytes crossing them are the
+scarce resource.  Three tools:
+
+1. ``quantize_grads`` / stateless int8 wire format: per-block-128 scales,
+   quantize -> dequantize around the (GSPMD-inserted) all-reduce.  Used as
+   the `grad_compressor` hook in build_train_step; numerically faithful to
+   an int8 wire (values pass through the int8 grid), 4x fewer wire bytes
+   when the runtime collective is int8 (shard_map path below).
+2. ``compressed_psum`` (shard_map): an *actual* int8 collective — each
+   member quantizes, all-gathers int8+scales over the axis, dequantizes and
+   sums locally.  Wire bytes: n*B/4 vs f32 ring all-reduce's ~2B.
+3. ``topk_sparsify`` + error feedback: keep the top-k fraction by
+   magnitude, accumulate the residual locally (momentum-correct SGD-EF),
+   bitpack the index bitmap with the paper's bitpack codec for the wire.
+
+DiLoCo-style outer sync (distributed/diloco.py) composes (2) across the
+'pod' axis every H inner steps.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+QBLOCK = 128
+
+
+def quantize_leaf(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    flat = g.astype(jnp.float32).reshape(-1)
+    pad = (-flat.shape[0]) % QBLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, QBLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_leaf(q: jnp.ndarray, scale: jnp.ndarray, shape,
+                    dtype=jnp.float32) -> jnp.ndarray:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def quantize_grads(grads):
+    """Stateless int8 wire-format pass (grad_compressor hook)."""
+    def qdq(g):
+        if g.size < QBLOCK:
+            return g
+        q, s = quantize_leaf(g)
+        return dequantize_leaf(q, s, g.shape, g.dtype)
+    return jax.tree.map(qdq, grads)
+
+
+def compressed_psum(x: jnp.ndarray, axis_name: str):
+    """int8 all-gather + local dequant-sum; call INSIDE shard_map."""
+    q, s = quantize_leaf(x)
+    qg = jax.lax.all_gather(q, axis_name)          # (n, nb, B) int8 on wire
+    sg = jax.lax.all_gather(s, axis_name)
+    deq = qg.astype(jnp.float32) * sg              # (n, nb, B)
+    summed = jnp.sum(deq, axis=0)
+    n = x.size
+    return summed.reshape(-1)[:n].reshape(x.shape)
+
+
+def make_compressed_psum_fn(mesh, axis: str = "pod"):
+    """Jit-able tree-wise compressed all-reduce over one mesh axis.
+
+    Input tree leaves carry a leading per-member axis of size
+    mesh.shape[axis] (e.g. per-pod parameter replicas in the DiLoCo outer
+    loop); each member contributes its slice, receives the int8-wire sum.
+    """
+
+    def tree_psum(tree):
+        flat, tdef = jax.tree.flatten(tree)
+
+        def body(*leaves):
+            # leaves arrive with the leading member axis reduced to 1
+            return tuple(
+                compressed_psum(l[0], axis)[None] for l in leaves)
+
+        specs = tuple(P(axis) for _ in flat)
+        out = shard_map(body, mesh=mesh, in_specs=specs, out_specs=specs,
+                        check_rep=False)(*flat)
+        return tdef.unflatten(list(out))
+
+    return tree_psum
+
+
+def wire_bytes_f32_allreduce(nbytes: int, n: int) -> float:
+    """Ring all-reduce wire bytes per member for an f32 payload."""
+    return 2.0 * nbytes * (n - 1) / n
+
+
+def wire_bytes_compressed(nbytes: int, n: int) -> float:
+    """int8 all-gather wire bytes per member (values/4 + scales/128)."""
+    payload = nbytes / 4.0 + (nbytes / 4.0 / QBLOCK) * 4.0
+    return payload * (n - 1)
+
+
+# ---------------------------------------------------------------------------
+# top-k sparsification with error feedback
+# ---------------------------------------------------------------------------
+
+
+def topk_sparsify(g: jnp.ndarray, residual: jnp.ndarray, frac: float = 0.01):
+    """Keep top-`frac` entries of (g + residual) by magnitude.
+
+    Returns (sparse_g, new_residual).  The surviving values + a bitpacked
+    index mask are what crosses the wire (mask = 1 bit/elem via the
+    paper's bitpack codec; values = 32/16-bit each)."""
+    acc = g.astype(jnp.float32) + residual
+    k = max(1, int(acc.size * frac))
+    flat = acc.reshape(-1)
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    mask = jnp.abs(flat) >= thresh
+    kept = jnp.where(mask, flat, 0.0)
+    new_residual = (flat - kept).reshape(acc.shape)
+    return kept.reshape(acc.shape).astype(g.dtype), new_residual
+
+
+def topk_wire_bytes(size: int, frac: float) -> float:
+    """values (f16) + 1-bit bitpacked mask, per member."""
+    k = max(1, int(size * frac))
+    return k * 2.0 + size / 8.0

@@ -1,0 +1,155 @@
+"""Roofline terms from compiled artifacts (TPU v5e targets, CPU dry-run).
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+    memory     = HLO_bytes_per_device / HBM_bw_per_chip
+    collective = collective_bytes_per_device / ICI_link_bw
+
+HLO FLOPs / bytes come from ``compiled.cost_analysis()`` (per-partition
+numbers — verified empirically: a (2,4)-sharded matmul reports 1/8 of the
+global FLOPs).  Collective bytes are parsed from the optimized HLO text:
+every all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute instruction contributes its *result* shape bytes (the
+``-start`` form counted once, ``-done`` skipped).  That is a per-device,
+per-invocation proxy for link traffic; ring-algorithm factors (2(n-1)/n for
+all-reduce etc.) are folded in as noted in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12       # bf16 FLOP/s
+HBM_BW = 819e9            # bytes/s
+ICI_BW = 50e9             # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute", "ragged-all-to-all")
+
+_SHAPE_RE = re.compile(r"\b([a-z]+\d*)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes per collective op kind from optimized HLO."""
+    out: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.*)$", stripped)
+        if not m:
+            continue
+        rest = m.group(1)
+        op = None
+        for cand in _COLL_OPS:
+            if re.search(rf"\b{cand}(-start)?\(", rest):
+                op = cand
+                break
+        if op is None or f"{op}-done" in rest:
+            continue
+        # result shapes = everything before the op token
+        head = rest.split(f" {op}")[0]
+        nbytes = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(head))
+        if f"{op}-start" in rest:
+            nbytes //= 2  # start-op tuples alias (operand, result)
+        out[op] = out.get(op, 0) + nbytes
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                  # per device
+    hbm_bytes: float              # per device
+    coll_bytes: float             # per device
+    coll_by_op: Dict[str, int]
+    model_flops: float            # global useful FLOPs (6ND / 2ND)
+    n_chips: int
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO flops summed over chips)."""
+        total = self.flops * self.n_chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Upper bound on achievable MFU given the dominant term."""
+        if self.t_bound == 0:
+            return 0.0
+        return (self.model_flops / self.n_chips / PEAK_FLOPS) / self.t_bound
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_dev": self.flops,
+            "hbm_bytes_per_dev": self.hbm_bytes,
+            "coll_bytes_per_dev": self.coll_bytes,
+            "coll_by_op": self.coll_by_op,
+            "model_flops": self.model_flops,
+            "n_chips": self.n_chips,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "useful_flops_ratio": self.useful_ratio,
+            "mfu_bound": self.mfu_bound,
+        }
+
+
+def analyze(compiled, model_flops: float, n_chips: int,
+            hlo_text: Optional[str] = None) -> Roofline:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    txt = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = collective_bytes(txt)
+    return Roofline(
+        flops=float(ca.get("flops", 0.0)),
+        hbm_bytes=float(ca.get("bytes accessed", 0.0)),
+        coll_bytes=float(sum(coll.values())),
+        coll_by_op=coll,
+        model_flops=model_flops,
+        n_chips=n_chips,
+    )
+
+
+def model_flops_for(cfg, shape) -> float:
+    """6·N_active·tokens for train, 2·N_active·tokens for inference."""
+    n_active = cfg.active_param_count()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active * tokens

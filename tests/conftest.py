@@ -1,0 +1,8 @@
+# NOTE: no XLA_FLAGS here — smoke tests must see 1 device (the dry-run
+# sets its own 512-device flag in its own process; multi-device tests
+# spawn subprocesses).
+import pytest
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running integration test")

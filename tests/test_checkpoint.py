@@ -1,0 +1,133 @@
+"""Checkpointing: atomic publish, async, codec compression, retention,
+fault-tolerant runner restart, straggler detection."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.core import format as fmt
+from repro.distributed import fault
+
+
+def _state(seed=0):
+    k = jax.random.key(seed)
+    return {"w": jax.random.normal(k, (64, 32)),
+            "b": jnp.arange(10, dtype=jnp.int32),
+            "nested": {"m": jnp.ones((128,), jnp.float32) * 3}}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    s = _state()
+    ckpt.save(str(tmp_path), 5, s)
+    assert ckpt.latest_step(str(tmp_path)) == 5
+    got = ckpt.restore(str(tmp_path), 5, s)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), s, got)
+
+
+def test_async_save(tmp_path):
+    s = _state()
+    t = ckpt.save(str(tmp_path), 1, s, async_=True)
+    assert t is not None
+    t.join(timeout=30)
+    got = ckpt.restore(str(tmp_path), 1, s)
+    np.testing.assert_array_equal(np.asarray(got["w"]), np.asarray(s["w"]))
+
+
+@pytest.mark.parametrize("codec", [fmt.RLE_V2, fmt.TDEFLATE])
+def test_compressed_checkpoint(tmp_path, codec):
+    s = {"ints": jnp.asarray(np.repeat(np.arange(50, dtype=np.int32), 40)),
+         "f32": jnp.ones((2048,), jnp.float32)}
+    ckpt.save(str(tmp_path), 2, s, codec=codec)
+    got = ckpt.restore(str(tmp_path), 2, s)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), s, got)
+
+
+def test_retention(tmp_path):
+    s = _state()
+    for step in (1, 2, 3, 4, 5):
+        ckpt.save(str(tmp_path), step, s, keep=2)
+    steps = sorted(ckpt.all_steps(str(tmp_path)))
+    assert steps == [4, 5]
+
+
+def test_elastic_restore_changes_layout(tmp_path):
+    """Restore with explicit shardings (single device: identity layout,
+    exercises the device_put path the elastic restart uses)."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    s = _state()
+    ckpt.save(str(tmp_path), 3, s)
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1), ("data",))
+    sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), s)
+    got = ckpt.restore(str(tmp_path), 3, s, shardings=sh)
+    assert got["w"].sharding == sh["w"]
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance
+# ---------------------------------------------------------------------------
+
+
+def _quadratic_step(state, batch):
+    w = state["w"]
+    g = 2 * (w - batch)
+    w = w - 0.1 * g
+    return {"w": w}, float(jnp.sum((w - batch) ** 2))
+
+
+def test_runner_restarts_from_checkpoint(tmp_path):
+    target = jnp.ones((4,))
+    injector = fault.FailureInjector(fail_at_steps=[7, 13])
+    runner = fault.FaultTolerantRunner(
+        _quadratic_step, str(tmp_path), ckpt_every=5, injector=injector,
+        async_ckpt=False)
+    batches = (target for _ in iter(int, 1))
+    state, report = runner.run({"w": jnp.zeros((4,))}, batches, 20)
+    assert report.steps_done == 20
+    assert report.restarts == 2
+    assert report.losses[-1] < 1e-3
+
+
+def test_runner_gives_up_after_max_restarts(tmp_path):
+    injector = fault.FailureInjector(fail_at_steps=[1])
+
+    class AlwaysFail(fault.FailureInjector):
+        def maybe_fail(self, step):
+            raise fault.WorkerFailure("dead node")
+
+    runner = fault.FaultTolerantRunner(
+        _quadratic_step, str(tmp_path), ckpt_every=5,
+        injector=AlwaysFail(), max_restarts=2, async_ckpt=False)
+    with pytest.raises(fault.WorkerFailure):
+        runner.run({"w": jnp.zeros((4,))},
+                   (jnp.ones((4,)) for _ in iter(int, 1)), 10)
+
+
+def test_straggler_detection():
+    mon = fault.StepMonitor(straggler_factor=3.0)
+    for i in range(10):
+        mon.observe(i, 0.1)
+    rec = mon.observe(10, 0.55)
+    assert rec.straggler
+    assert len(mon.stragglers) == 1
+    assert mon.healthy(timeout=60)
+
+
+def test_resume_from_existing_checkpoint(tmp_path):
+    """A fresh runner resumes at the last checkpointed step."""
+    target = jnp.ones((4,))
+    r1 = fault.FaultTolerantRunner(_quadratic_step, str(tmp_path),
+                                   ckpt_every=5, async_ckpt=False)
+    state, rep1 = r1.run({"w": jnp.zeros((4,))},
+                         (target for _ in iter(int, 1)), 10)
+    r2 = fault.FaultTolerantRunner(_quadratic_step, str(tmp_path),
+                                   ckpt_every=5, async_ckpt=False)
+    state2, rep2 = r2.run({"w": jnp.zeros((4,))},
+                          (target for _ in iter(int, 1)), 15)
+    # resumed from step 10, ran only 5 more
+    assert rep2.steps_done == 15
+    assert len(rep2.losses) == 5

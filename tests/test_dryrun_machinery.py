@@ -1,0 +1,51 @@
+"""Dry-run machinery on a small mesh (subprocess, 8 devices): lower+compile
+a reduced arch through the exact run_cell pipeline, probe-corrected costs."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.slow
+def test_probe_corrected_costs_small_mesh():
+    body = textwrap.dedent("""
+        import os
+        # NOTE: repro.launch.dryrun sets XLA_FLAGS=512 at import (its
+        # first-two-lines contract); import it FIRST, then override to 8
+        # before jax initializes its backend.
+        from repro.launch import dryrun
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import dataclasses, jax, numpy as np
+        from jax.sharding import Mesh
+        from repro.configs import get_arch, reduced
+        from repro.configs.base import ShapeSpec
+        from repro.distributed import sharding
+
+        cfg = dataclasses.replace(reduced(get_arch("qwen3-1.7b"), n_layers=4),
+                                  dtype="bfloat16")
+        shape = ShapeSpec("t", 64, 8, "train")
+        mesh = Mesh(np.asarray(jax.devices()).reshape(2, 2, 2),
+                    ("pod", "data", "model"))
+        with mesh, sharding.use_mesh(mesh):
+            compiled = dryrun._compile_cell(cfg, shape, mesh, unroll=False)
+            raw = dryrun._raw_costs(compiled)
+            cost = dryrun.probe_costs(cfg, shape, mesh)
+        # probe-corrected flops must exceed the scan-undercounted raw flops
+        assert cost["flops"] > raw["flops"] * 1.5, (cost["flops"], raw["flops"])
+        # and be within 3x of the analytic 6ND estimate (remat/attention slack)
+        n = cfg.param_count()
+        model_flops = 6 * n * 64 * 8 / 8  # per device
+        assert 0.3 < cost["flops"] / model_flops < 4.0, \
+            (cost["flops"], model_flops)
+        print("PASS", raw["flops"], cost["flops"])
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    r = subprocess.run([sys.executable, "-c", body], capture_output=True,
+                       text=True, env=env, timeout=900)
+    assert r.returncode == 0, r.stderr[-4000:]
+    assert "PASS" in r.stdout

@@ -1,0 +1,71 @@
+"""Optimizer + gradient-compression tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import adamw, grad_compress as gc
+
+
+def _train_quadratic(opt_cfg, steps=60):
+    params = {"w": jnp.asarray(np.linspace(-2, 2, 256), jnp.float32)}
+    state = adamw.init(params, opt_cfg)
+    target = jnp.ones((256,))
+    losses = []
+    for _ in range(steps):
+        g = {"w": 2 * (params["w"] - target)}
+        params, state = adamw.apply(params, g, state, opt_cfg)
+        losses.append(float(jnp.mean((params["w"] - target) ** 2)))
+    return losses
+
+
+def test_adamw_descends():
+    losses = _train_quadratic(adamw.AdamWConfig(lr=5e-2, weight_decay=0.0))
+    assert losses[-1] < losses[0] * 0.01
+
+
+def test_compressed_moments_track_uncompressed():
+    base = _train_quadratic(adamw.AdamWConfig(lr=5e-2, weight_decay=0.0))
+    comp = _train_quadratic(adamw.AdamWConfig(lr=5e-2, weight_decay=0.0,
+                                              compress_moments=True))
+    assert comp[-1] < base[0] * 0.05    # still converges
+    assert abs(comp[-1] - base[-1]) < 0.1
+
+
+def test_compressed_moment_memory():
+    params = {"w": jnp.zeros((4096,), jnp.bfloat16)}
+    s8 = adamw.init(params, adamw.AdamWConfig(compress_moments=True))
+    s32 = adamw.init(params, adamw.AdamWConfig())
+    b8 = sum(x.nbytes for x in jax.tree.leaves(s8["m"]))
+    b32 = sum(x.nbytes for x in jax.tree.leaves(s32["m"]))
+    assert b8 < b32 / 3.5               # int8 + scales ~ 4x smaller
+
+
+def test_int8_quantize_error_bound():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(size=(100 * gc.QBLOCK,)), jnp.float32)
+    out = gc.quantize_grads({"g": g})["g"]
+    err = np.abs(np.asarray(out - g))
+    block_max = np.abs(np.asarray(g)).reshape(-1, gc.QBLOCK).max(1)
+    # error bounded by one int8 quantum per block
+    assert (err.reshape(-1, gc.QBLOCK).max(1) <= block_max / 127.0 + 1e-7).all()
+
+
+def test_topk_error_feedback_conserves_value():
+    """EF invariant: sum of sent updates + residual == n_rounds * g exactly
+    (nothing is lost, only delayed)."""
+    g = jnp.asarray(np.linspace(0, 1, 1000), jnp.float32)
+    residual = jnp.zeros_like(g)
+    sent = jnp.zeros_like(g)
+    n = 50
+    for _ in range(n):
+        s, residual = gc.topk_sparsify(g, residual, frac=0.05)
+        sent = sent + s
+    np.testing.assert_allclose(np.asarray(sent + residual),
+                               np.asarray(n * g), rtol=1e-4, atol=1e-4)
+    # the max entry is transmitted (almost) every round
+    assert float(sent[-1]) / n > 0.95 * float(g[-1])
+
+
+def test_topk_wire_accounting():
+    assert gc.topk_wire_bytes(1 << 20, 0.01) < (1 << 20) * 4 / 20

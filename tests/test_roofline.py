@@ -1,0 +1,132 @@
+"""Roofline machinery: HLO collective parser + flops model + sharding specs."""
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_arch
+from repro.configs.base import SHAPES
+from repro.roofline import analysis
+
+HLO = """
+HloModule jit_step
+  %x = bf16[256,1024]{1,0} parameter(0)
+  %all-reduce.1 = bf16[256,1024]{1,0} all-reduce(%x), replica_groups={}
+  %ag = f32[16,512]{1,0} all-gather(%y), dimensions={0}
+  %rs = bf16[8,128]{1,0} reduce-scatter(%z), dimensions={0}
+  %ard = (bf16[64]{0}, bf16[64]{0}) all-reduce-start(%w)
+  %done = bf16[64]{0} all-reduce-done(%ard)
+  %cp = u8[4096]{0} collective-permute(%q)
+  %notacoll = bf16[9,9]{1,0} add(%x, %x)
+"""
+
+
+def test_collective_parser():
+    out = analysis.collective_bytes(HLO)
+    assert out["all-reduce"] == 256 * 1024 * 2 + 64 * 2  # start tuple halved
+    assert out["all-gather"] == 16 * 512 * 4
+    assert out["reduce-scatter"] == 8 * 128 * 2
+    assert out["collective-permute"] == 4096
+    assert "add" not in out
+
+
+def test_roofline_terms_and_dominant():
+    r = analysis.Roofline(flops=197e12, hbm_bytes=819e9 / 2,
+                          coll_bytes=50e9 * 2, coll_by_op={},
+                          model_flops=197e12 * 256, n_chips=256)
+    assert abs(r.t_compute - 1.0) < 1e-9
+    assert abs(r.t_memory - 0.5) < 1e-9
+    assert abs(r.t_collective - 2.0) < 1e-9
+    assert r.dominant == "collective"
+    assert abs(r.useful_ratio - 1.0) < 1e-9
+
+
+def test_model_flops_train_vs_decode():
+    cfg = get_arch("olmo-1b")
+    t = analysis.model_flops_for(cfg, SHAPES["train_4k"])
+    d = analysis.model_flops_for(cfg, SHAPES["decode_32k"])
+    n = cfg.param_count()
+    assert abs(t - 6 * n * 256 * 4096) / t < 1e-9
+    assert abs(d - 2 * n * 128) / d < 1e-9
+
+
+def test_moe_uses_active_params():
+    cfg = get_arch("qwen3-moe-235b-a22b")
+    t = analysis.model_flops_for(cfg, SHAPES["train_4k"])
+    assert t < 6 * cfg.param_count() * 256 * 4096 / 4   # far below total-N
+
+
+def test_param_spec_rules():
+    import jax
+    from jax.sharding import Mesh
+    from repro.distributed import sharding
+    from repro.models import model
+
+    cfg = get_arch("qwen3-1.7b")
+    params = model.abstract_params(cfg)
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    specs = sharding.param_specs(params, mesh)
+    blocks = specs["blocks"]
+    # stacked attn weights: (L, D, H*hd) -> last dim on model
+    assert blocks["attn"]["wq"] == P(None, None, "model")
+    assert blocks["attn"]["wo"] == P(None, "model", None)
+    assert blocks["mlp"]["w_down"] == P(None, "model", None)
+    assert specs["embed"] == P(None, "model")
+    assert specs["lm_head"] == P(None, "model")
+    # norms replicated
+    assert blocks["ln1"] == P()
+
+
+def test_moe_param_specs_expert_dim():
+    import jax
+    from jax.sharding import Mesh
+    from repro.distributed import sharding
+    from repro.models import model
+
+    cfg = get_arch("qwen3-moe-235b-a22b")
+    params = model.abstract_params(cfg)
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    specs = sharding.param_specs(params, mesh)
+    assert specs["blocks"]["moe"]["w_up"] == P(None, "model", None, None)
+    assert specs["blocks"]["moe"]["router"] == P()
+
+
+def test_dp_policy_replicates_weights():
+    """§Perf hillclimb 1: --policy dp folds 'model' into data parallelism."""
+    import jax
+    from jax.sharding import Mesh
+    from repro.distributed import sharding
+    from repro.models import model
+
+    cfg = get_arch("rwkv6-1.6b")
+    params = model.abstract_params(cfg)
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    with sharding.use_mesh(mesh, policy="dp"):
+        specs = sharding.param_specs(params, mesh)
+        # everything replicated
+        assert all(s == P() for s in jax.tree.leaves(
+            specs, is_leaf=lambda x: isinstance(x, P)))
+        # and the model axis becomes a batch axis
+        assert "model" in sharding.dp_axes(mesh)
+    with sharding.use_mesh(mesh, policy="tp"):
+        assert "model" not in sharding.dp_axes(mesh)
+
+
+def test_indivisible_dims_replicate():
+    import jax
+    from jax.sharding import Mesh
+    from repro.distributed import sharding
+    from repro.models import model
+
+    cfg = get_arch("paligemma-3b")   # n_kv=1: wk out dim = 256, head count 1
+    params = model.abstract_params(cfg)
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+    specs = sharding.param_specs(params, FakeMesh())
+    # kv projection (D, 1*256): 256 % 16 == 0 -> sharded; that's fine.
+    # vocab 257216 % 16 == 0 -> sharded
+    assert specs["lm_head"] == P(None, "model")

@@ -1,0 +1,102 @@
+"""Unit tests for the Table I/II stream APIs (core/streams.py)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import streams as st
+
+
+def _mk_words(bits: str) -> jnp.ndarray:
+    """LSB-first bitstring -> uint32 word array (padded)."""
+    bits = bits + "0" * ((-len(bits)) % 32)
+    words = []
+    for i in range(0, len(bits), 32):
+        w = 0
+        for j, b in enumerate(bits[i:i + 32]):
+            w |= int(b) << j
+        words.append(w)
+    return jnp.asarray(words + [0, 0], jnp.uint32)
+
+
+class TestBitStream:
+    def test_fetch_sequence(self):
+        s = st.bitstream(_mk_words("10110011" * 8))
+        v, s = st.fetch_bits(s, 3)       # bits 101 LSB-first -> 0b101
+        assert int(v) == 0b101
+        v, s = st.fetch_bits(s, 5)       # bits 10011 -> 0b11001
+        assert int(v) == 0b11001
+        assert int(s.pos) == 8
+
+    def test_peek_does_not_advance(self):
+        s = st.bitstream(_mk_words("1111000010101010"))
+        a = st.peek_bits(s, 7)
+        b = st.peek_bits(s, 7)
+        assert int(a) == int(b)
+        assert int(s.pos) == 0
+
+    def test_cross_word_fetch(self):
+        # place a known pattern across the 32-bit boundary
+        rng = np.random.default_rng(0)
+        raw = "".join(rng.choice(["0", "1"], 96))
+        s = st.bitstream(_mk_words(raw))
+        s = st.skip_bits(s, 27)
+        v = st.peek_bits(s, 12)
+        expect = int(raw[27:39][::-1], 2)
+        assert int(v) == expect
+
+    def test_dynamic_n(self):
+        s = st.bitstream(_mk_words("1" * 64))
+        v = st.peek_bits(s, jnp.int32(5))
+        assert int(v) == 31
+
+
+class TestByteStream:
+    def test_read_value_widths(self):
+        data = jnp.asarray(np.arange(12, dtype=np.uint8))
+        assert int(st.read_value_at(data, 2, 1)) == 2
+        assert int(st.read_value_at(data, 2, 2)) == 2 | (3 << 8)
+        assert int(st.read_value_at(data, 0, 4)) == 0x03020100
+
+
+class TestOutStream:
+    def test_write_byte(self):
+        s = st.outstream(8, jnp.uint8)
+        s = st.write_byte(s, jnp.uint32(7))
+        s = st.write_byte(s, jnp.uint32(9))
+        assert s.buf[:2].tolist() == [7, 9]
+        assert int(s.pos) == 2
+
+    def test_write_run_with_delta(self):
+        s = st.outstream(64 + 16, jnp.uint32)
+        s = st.write_run(s, jnp.uint32(10), jnp.int32(5), jnp.uint32(3), 16)
+        assert s.buf[:5].tolist() == [10, 13, 16, 19, 22]
+        assert int(s.pos) == 5
+
+    def test_write_run_wraparound(self):
+        # negative delta as two's complement wraps correctly
+        s = st.outstream(32, jnp.uint32)
+        neg1 = jnp.uint32(0xFFFFFFFF)
+        s = st.write_run(s, jnp.uint32(5), jnp.int32(4), neg1, 8)
+        assert s.buf[:4].tolist() == [5, 4, 3, 2]
+
+    def test_memcpy_non_overlapping(self):
+        s = st.outstream(64, jnp.uint8)
+        for b in [1, 2, 3, 4]:
+            s = st.write_byte(s, jnp.uint32(b))
+        s = st.memcpy(s, jnp.int32(4), jnp.int32(4), 16)
+        assert s.buf[:8].tolist() == [1, 2, 3, 4, 1, 2, 3, 4]
+
+    def test_memcpy_overlap_circular(self):
+        # the Alg.2 special case: length > offset repeats the window
+        s = st.outstream(64, jnp.uint8)
+        for b in [7, 8]:
+            s = st.write_byte(s, jnp.uint32(b))
+        s = st.memcpy(s, jnp.int32(2), jnp.int32(7), 16)
+        assert s.buf[:9].tolist() == [7, 8, 7, 8, 7, 8, 7, 8, 7]
+
+    def test_memcpy_offset_one(self):
+        # run-of-last-byte via dist=1 (classic deflate idiom)
+        s = st.outstream(32, jnp.uint8)
+        s = st.write_byte(s, jnp.uint32(42))
+        s = st.memcpy(s, jnp.int32(1), jnp.int32(6), 8)
+        assert s.buf[:7].tolist() == [42] * 7

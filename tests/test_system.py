@@ -1,0 +1,54 @@
+"""End-to-end behaviour tests: the full training driver (compressed data
+pipeline -> model -> optimizer -> checkpoints -> fault recovery) and the
+serving driver, run as real subprocesses on reduced configs."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(args, timeout=900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    r = subprocess.run([sys.executable, "-m"] + args, capture_output=True,
+                       text=True, env=env, timeout=timeout)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-4000:]}"
+    return r.stdout
+
+
+@pytest.mark.slow
+def test_train_driver_end_to_end(tmp_path):
+    out = _run(["repro.launch.train", "--arch", "olmo-1b", "--preset", "tiny",
+                "--steps", "30", "--batch", "4", "--seq", "128",
+                "--ckpt-dir", str(tmp_path)])
+    assert "OK" in out
+    assert "compression ratio" in out
+
+
+@pytest.mark.slow
+def test_train_driver_survives_injected_failures(tmp_path):
+    out = _run(["repro.launch.train", "--arch", "qwen3-1.7b", "--preset",
+                "tiny", "--steps", "25", "--batch", "2", "--seq", "64",
+                "--ckpt-dir", str(tmp_path), "--fail-at", "12",
+                "--ckpt-every", "5"])
+    assert "restarts=1" in out
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_train_driver_grad_int8_and_compressed_moments(tmp_path):
+    out = _run(["repro.launch.train", "--arch", "olmo-1b", "--preset", "tiny",
+                "--steps", "25", "--batch", "2", "--seq", "64",
+                "--ckpt-dir", str(tmp_path), "--grad-int8",
+                "--compress-moments"])
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_serve_driver_end_to_end():
+    out = _run(["repro.launch.serve", "--arch", "rwkv6-1.6b", "--preset",
+                "tiny", "--batch", "2", "--prompt-len", "16", "--gen", "8"])
+    assert "OK" in out
