@@ -1,0 +1,120 @@
+"""Batched vs per-blob decompression: launches-per-restore + throughput.
+
+The scenario is a checkpoint / data-pipeline load of N small arrays (mixed
+codecs and dtypes).  The per-blob loop issues one engine dispatch per blob —
+the few-streams provisioning pathology CODAG critiques — while the batch
+scheduler coalesces every chunk of every blob into one dispatch per
+(codec, width, chunk_elems, bits) group.
+
+    PYTHONPATH=src python -m benchmarks.batched [--smoke] [--out FILE.json]
+
+Emits ``name,value,derived`` CSV rows (benchmarks/run.py convention) and,
+with --out, a JSON artifact (the CI perf-trajectory file BENCH_batched.json).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import api, format as fmt
+from repro.core.engine import CodagEngine, EngineConfig
+from repro.kernels import ops
+
+
+def build_restore_set(n_arrays: int, kb_per_array: int, seed: int = 0):
+    """Mixed-codec arrays shaped like a model-state restore."""
+    rng = np.random.default_rng(seed)
+    codecs = [fmt.RLE_V1, fmt.RLE_V2, fmt.TDEFLATE, fmt.BITPACK]
+    arrays, chosen = [], []
+    for i in range(n_arrays):
+        codec = codecs[i % len(codecs)]
+        n = (kb_per_array * 1024) // 4
+        if codec == fmt.TDEFLATE:
+            arr = np.frombuffer((b"layer_%d " % i) * (kb_per_array * 128),
+                                np.uint8)[: kb_per_array * 1024].copy()
+        elif codec == fmt.BITPACK:
+            arr = rng.integers(0, 2 ** 9, n).astype(np.uint32)
+        else:
+            vals = rng.integers(0, 100, max(4, n // 50)).astype(np.uint32)
+            arr = np.repeat(vals, rng.integers(1, 100, len(vals)))[:n]
+        arrays.append(arr)
+        chosen.append(codec)
+    return arrays, chosen
+
+
+def _time(fn, iters: int):
+    fn()  # warmup (jit trace)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def run(n_arrays: int = 16, kb_per_array: int = 64, iters: int = 3,
+        chunk_bytes: int = 16 * 1024, seed: int = 0):
+    arrays, codecs = build_restore_set(n_arrays, kb_per_array, seed)
+    cas = api.compress_many(arrays, codecs, chunk_bytes=chunk_bytes)
+    engine = CodagEngine(EngineConfig())
+    total_bytes = sum(a.nbytes for a in arrays)
+
+    with ops.count_dispatches() as c:
+        per_blob = [api.decompress(ca, engine) for ca in cas]
+    launches_loop = len(c)
+    with ops.count_dispatches() as c:
+        batched = api.decompress_many(cas, engine)
+    launches_batched = len(c)
+
+    for a, p, b in zip(arrays, per_blob, batched):
+        assert np.array_equal(a, p) and np.array_equal(a, b)
+
+    t_loop = _time(lambda: [api.decompress(ca, engine) for ca in cas], iters)
+    t_batch = _time(lambda: api.decompress_many(cas, engine), iters)
+
+    rows = [
+        ("batched/n_arrays", n_arrays, ""),
+        ("batched/total_MB", total_bytes / 1e6, ""),
+        ("batched/launches_per_restore/loop", launches_loop, ""),
+        ("batched/launches_per_restore/batched", launches_batched,
+         launches_loop / max(1, launches_batched)),
+        ("batched/throughput_MBps/loop", total_bytes / t_loop / 1e6, ""),
+        ("batched/throughput_MBps/batched", total_bytes / t_batch / 1e6,
+         t_loop / t_batch),
+        ("batched/speedup", t_loop / t_batch, ""),
+    ]
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI: finishes in well under a minute")
+    ap.add_argument("--n-arrays", type=int, default=16)
+    ap.add_argument("--kb-per-array", type=int, default=64)
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--out", default=None, help="also write a JSON artifact")
+    args = ap.parse_args()
+    if args.smoke:
+        args.n_arrays, args.kb_per_array, args.iters = 8, 8, 1
+
+    rows = run(args.n_arrays, args.kb_per_array, args.iters)
+    print("name,value,derived")
+    for name, value, derived in rows:
+        print(f"{name},{value},{derived}")
+
+    if args.out:
+        payload = {name: value for name, value, _ in rows}
+        payload["smoke"] = bool(args.smoke)
+        out = Path(args.out)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps(payload, indent=2))
+        print(f"# wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

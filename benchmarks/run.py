@@ -8,6 +8,8 @@ Prints ``name,value,derived`` CSV rows:
                          §V-F (warp vs block provisioning + pool sweep)
   ratios.py           -> Table V (compression ratios, symbol lengths)
   roofline_report.py  -> §Roofline terms from the dry-run artifacts
+  batched.py          -> launches-per-restore + throughput, batched vs
+                         per-blob decode (core.batch scheduler)
 """
 from __future__ import annotations
 
@@ -21,10 +23,12 @@ def main() -> None:
     ap.add_argument("--size-mb", type=float, default=0.25,
                 help="per-dataset size; 0.25 keeps the full suite ~10 min on CPU")
     ap.add_argument("--only", default=None,
-                    help="throughput|ablation_decode|ablation_unit|ratios|roofline")
+                    help="throughput|ablation_decode|ablation_unit|ratios|"
+                         "roofline|batched")
     args = ap.parse_args()
 
-    from benchmarks import ablations, ratios, roofline_report, throughput
+    from benchmarks import (ablations, batched, ratios, roofline_report,
+                            throughput)
     suites = {
         "throughput": lambda: throughput.run(args.size_mb),
         "ablation_decode": lambda: ablations.run_decode_ablation(
@@ -33,6 +37,8 @@ def main() -> None:
             min(args.size_mb, 0.5)),
         "ratios": lambda: ratios.run(args.size_mb),
         "roofline": roofline_report.run,
+        "batched": lambda: batched.run(
+            n_arrays=12, kb_per_array=max(8, int(args.size_mb * 64))),
     }
     if args.only:
         suites = {args.only: suites[args.only]}

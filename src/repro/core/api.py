@@ -4,16 +4,20 @@
     blob = api.compress(arr, "rle_v2")          # host-side encode
     out  = api.decompress(blob)                 # device decode, == arr
 
+    cas  = api.compress_many(arrs, "rle_v2")    # list in, list out
+    outs = api.decompress_many(cas)             # ONE dispatch per codec group
+
 8-byte dtypes are plane-decomposed (lo/hi uint32 planes compressed as two
 blobs) so RLE runs survive — see DESIGN.md §2 format notes.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import List, Optional, Sequence, Union
 
 import numpy as np
 
+from repro.core import batch as batch_mod
 from repro.core import encoders as enc
 from repro.core import format as fmt
 from repro.core.engine import CodagEngine, EngineConfig
@@ -53,12 +57,47 @@ def compress(arr: np.ndarray, codec: str,
                            orig_dtype=str(arr.dtype), orig_shape=tuple(arr.shape))
 
 
-def decompress(ca: CompressedArray,
-               engine: Optional[CodagEngine] = None) -> np.ndarray:
-    engine = engine or CodagEngine(EngineConfig())
-    outs = [engine.decompress(b) for b in ca.blobs]
+def _combine(ca: CompressedArray, outs: List[np.ndarray]) -> np.ndarray:
     if len(outs) == 1:
         return outs[0]  # reassemble() already restored dtype/shape
     lo, hi = outs
     u64 = lo.reshape(-1).astype(np.uint64) | (hi.reshape(-1).astype(np.uint64) << np.uint64(32))
     return u64.view(np.dtype(ca.orig_dtype)).reshape(ca.orig_shape)
+
+
+def decompress(ca: CompressedArray,
+               engine: Optional[CodagEngine] = None) -> np.ndarray:
+    engine = engine or CodagEngine(EngineConfig())
+    return _combine(ca, [engine.decompress(b) for b in ca.blobs])
+
+
+def compress_many(arrays: Sequence[np.ndarray],
+                  codec: Union[str, Sequence[str]],
+                  chunk_bytes: int = fmt.DEFAULT_CHUNK_BYTES,
+                  bits: Optional[int] = None) -> List[CompressedArray]:
+    """Compress a list of arrays; ``codec`` may be one name or one per array.
+
+    Encoding stays a host/offline concern (as in the paper); the point of the
+    list form is that the resulting blobs land in the batched decode path.
+    """
+    codecs = [codec] * len(arrays) if isinstance(codec, str) else list(codec)
+    if len(codecs) != len(arrays):
+        raise ValueError(f"{len(codecs)} codecs for {len(arrays)} arrays")
+    return [compress(a, c, chunk_bytes, bits=bits)
+            for a, c in zip(arrays, codecs)]
+
+
+def decompress_many(cas: Sequence[CompressedArray],
+                    engine: Optional[CodagEngine] = None) -> List[np.ndarray]:
+    """Batched decompress: every chunk of every array in one launch per
+    (codec, width, chunk_elems, bits) group — the CODAG provisioning move.
+
+    Bit-exact vs. per-array ``decompress``; outputs follow input order.
+    """
+    flat: List[fmt.CompressedBlob] = []
+    spans: List[tuple] = []   # (start, count) into flat, per array
+    for ca in cas:
+        spans.append((len(flat), len(ca.blobs)))
+        flat.extend(ca.blobs)
+    outs = batch_mod.decompress_blobs(flat, engine)
+    return [_combine(ca, outs[s:s + n]) for ca, (s, n) in zip(cas, spans)]

@@ -88,14 +88,17 @@ class CodagEngine:
         out = outs.reshape((n_serial * nu, chunk_elems))
         return out[:n_chunks]
 
+    def decompress_table(self, table: fmt.CompressedBlob) -> np.ndarray:
+        """Decode a flat chunk table (a single blob or a multi-blob merge
+        from ``format.concat_blobs``) with one dispatch, no reassembly.
+        Returns the raw (num_chunks, chunk_elems) host matrix in the table's
+        element dtype; callers owning a blob→row mapping scatter it back."""
+        dev, bits = ops.table_inputs(table)
+        out = self.decompress_chunks(dev, codec=table.codec,
+                                     width=table.width,
+                                     chunk_elems=table.chunk_elems, bits=bits)
+        return ops.cast_table_output(table, jax.device_get(out))
+
     def decompress(self, blob: fmt.CompressedBlob) -> np.ndarray:
         """Host convenience: full round trip back to the original ndarray."""
-        dev = {k: jnp.asarray(v) for k, v in blob.to_device().items()}
-        bits = (int(blob.extras["bitpack_bits"][0])
-                if blob.codec == fmt.BITPACK else 0)
-        out = self.decompress_chunks(dev, codec=blob.codec, width=blob.width,
-                                     chunk_elems=blob.chunk_elems, bits=bits)
-        out = np.asarray(jax.device_get(out))
-        if blob.codec == fmt.BITPACK:
-            out = out.astype({1: np.uint8, 2: np.uint16, 4: np.uint32}[blob.width])
-        return fmt.reassemble(blob, out)
+        return fmt.reassemble(blob, self.decompress_table(blob))

@@ -107,6 +107,69 @@ class CompressedBlob:
         return out
 
 
+def group_key(blob: "CompressedBlob") -> tuple:
+    """Batching key: blobs with equal keys share one decode dispatch.
+
+    Everything static to ``ops.decode`` must be in the key — codec, element
+    width, chunk geometry, and (for bitpack) the bit width.
+    """
+    bits = int(blob.extras["bitpack_bits"][0]) if blob.codec == BITPACK else 0
+    return (blob.codec, blob.width, blob.chunk_elems, bits)
+
+
+def concat_blobs(blobs: list["CompressedBlob"]) -> "CompressedBlob":
+    """Merge same-key blobs into one flat chunk table.
+
+    The result is a valid ``CompressedBlob`` whose rows are the chunks of
+    every input blob in order, so a single ``ops.decode`` treats each chunk
+    from each blob as an independent stream (the CODAG provisioning move:
+    one saturated launch instead of N under-provisioned ones).  Callers
+    scatter the (total_chunks, chunk_elems) output back per blob by row
+    ranges; the merged blob's ``orig_shape`` is a flat placeholder.
+
+    Memory note: every merged row is padded to the group-wide max compressed
+    row length, so grouping a near-incompressible blob with well-compressed
+    ones inflates the host table toward num_chunks * chunk_bytes.  Callers
+    that care bound the batch (``pipeline.decoded_shards(window=)``); if it
+    bites at checkpoint scale, sub-bucket groups by comp-row magnitude at
+    the cost of extra dispatches.
+    """
+    if not blobs:
+        raise ValueError("concat_blobs needs at least one blob")
+    key = group_key(blobs[0])
+    for b in blobs[1:]:
+        if group_key(b) != key:
+            raise ValueError(f"group key mismatch: {group_key(b)} != {key}")
+    if len(blobs) == 1:
+        return blobs[0]
+    max_len = max(b.comp.shape[1] for b in blobs)
+    total_chunks = sum(b.num_chunks for b in blobs)
+    comp = np.zeros((total_chunks, max_len), np.uint8)
+    row = 0
+    for b in blobs:
+        comp[row:row + b.num_chunks, : b.comp.shape[1]] = b.comp
+        row += b.num_chunks
+    extras: Dict[str, np.ndarray] = {}
+    for k, v0 in blobs[0].extras.items():
+        if k.startswith(("lut_", "hdr_")):   # per-chunk tables: stack rows
+            extras[k] = np.concatenate([b.extras[k] for b in blobs], axis=0)
+        else:                                # shared scalars (bitpack_bits)
+            extras[k] = v0
+    total_elems = sum(b.total_elems for b in blobs)
+    return CompressedBlob(
+        codec=blobs[0].codec,
+        width=blobs[0].width,
+        chunk_elems=blobs[0].chunk_elems,
+        total_elems=int(total_elems),
+        orig_dtype=blobs[0].orig_dtype,
+        orig_shape=(int(total_elems),),
+        comp=comp,
+        comp_lens=np.concatenate([b.comp_lens for b in blobs]).astype(np.int32),
+        out_lens=np.concatenate([b.out_lens for b in blobs]).astype(np.int32),
+        extras=extras,
+    )
+
+
 def chunk_array(arr: np.ndarray, chunk_bytes: int = DEFAULT_CHUNK_BYTES):
     """Split ``arr`` into fixed-size element chunks (last may be short)."""
     flat, width, dev_dtype = _as_bytes_view(arr)

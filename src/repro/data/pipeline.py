@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import batch as cbatch
 from repro.core import encoders as enc
 from repro.core import format as fmt
 from repro.core.engine import CodagEngine, EngineConfig
@@ -65,22 +66,40 @@ class CompressedTokenStore:
         u = sum(b.uncompressed_bytes for b in self.blobs)
         return c / max(1, u)
 
-    def decoded_shards(self, engine: CodagEngine) -> Iterator[np.ndarray]:
-        for b in self.blobs:
-            yield engine.decompress(b).astype(np.int32)
+    def decoded_shards(self, engine: CodagEngine,
+                       window: int = 1) -> Iterator[np.ndarray]:
+        """Decode shards; ``window`` > 1 coalesces that many shards' chunks
+        into one batched dispatch per codec group (CODAG provisioning) while
+        bounding peak host memory to ~window uncompressed shards."""
+        if window <= 1:
+            for b in self.blobs:
+                yield engine.decompress(b).astype(np.int32)
+            return
+        for i in range(0, len(self.blobs), window):
+            for out in cbatch.decompress_blobs(self.blobs[i:i + window],
+                                               engine):
+                yield out.astype(np.int32)
 
 
 class CompressedLoader:
     """Batches (tokens, labels) from a CompressedTokenStore with on-device
-    decompression and one-shard async prefetch."""
+    decompression and async prefetch.
+
+    Peak decoded-shard buffering is ``decode_window`` (shards fused into one
+    batched dispatch, materialized together) plus the prefetch queue's 2 —
+    not the single shard of the pre-batching loader.  ``decode_window=1``
+    restores the old one-shard-per-dispatch behavior."""
 
     def __init__(self, store: CompressedTokenStore, batch: int, seq: int,
-                 engine: Optional[CodagEngine] = None, prefetch: bool = True):
+                 engine: Optional[CodagEngine] = None, prefetch: bool = True,
+                 decode_window: int = 4):
         self.store = store
         self.batch = batch
         self.seq = seq
         self.engine = engine or CodagEngine(EngineConfig())
         self.prefetch = prefetch
+        # shards whose chunks are fused into one batched decode dispatch
+        self.decode_window = decode_window
 
     def __iter__(self) -> Iterator[Dict[str, jnp.ndarray]]:
         need = self.batch * self.seq + 1
@@ -88,7 +107,8 @@ class CompressedLoader:
 
         def shard_iter():
             while True:  # loop over shards forever
-                yield from self.store.decoded_shards(self.engine)
+                yield from self.store.decoded_shards(
+                    self.engine, window=self.decode_window)
 
         src = shard_iter()
         if self.prefetch:

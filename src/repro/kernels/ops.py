@@ -13,6 +13,7 @@ plus the blob's static metadata, and return (num_chunks, chunk_elems).
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 from typing import Any, Dict
 
@@ -94,15 +95,63 @@ def decode(dev: Dict[str, Any], *, codec: str, width: int, chunk_elems: int,
     raise ValueError(f"unknown codec {codec}")
 
 
+@contextlib.contextmanager
+def count_dispatches():
+    """Observe python-level ``decode`` dispatches (= kernel launches issued).
+
+    Yields a list that grows one entry per call, with the static decode
+    kwargs plus the table's chunk count.  Every caller (engine, batch
+    scheduler, tests, benchmarks) resolves ``ops.decode`` through the module
+    attribute at call time, so rebinding it here observes them all.
+    """
+    calls: list = []
+    orig = decode
+
+    def counting(dev, **kw):
+        calls.append({"num_chunks": int(dev["comp"].shape[0]), **kw})
+        return orig(dev, **kw)
+
+    globals()["decode"] = counting
+    try:
+        yield calls
+    finally:
+        globals()["decode"] = orig
+
+
+def table_inputs(table: fmt.CompressedBlob):
+    """(device pytree, static bitpack bits) for a blob / merged chunk table."""
+    dev = {k: jnp.asarray(v) for k, v in table.to_device().items()}
+    bits = (int(table.extras["bitpack_bits"][0])
+            if table.codec == fmt.BITPACK else 0)
+    return dev, bits
+
+
+def cast_table_output(table: fmt.CompressedBlob, out) -> np.ndarray:
+    """Bring a decode result to host in the table's element dtype."""
+    out = np.asarray(out)
+    if table.codec == fmt.BITPACK:
+        out = out.astype({1: np.uint8, 2: np.uint16, 4: np.uint32}[table.width])
+    return out
+
+
+def decode_table(table: fmt.CompressedBlob, backend: str = "xla",
+                 interpret: bool = True) -> np.ndarray:
+    """Decode a flat chunk table with ONE dispatch, no reassembly.
+
+    ``table`` may be a single blob or a multi-blob merge from
+    ``format.concat_blobs`` (the batch scheduler's stream table): every row
+    is an independent stream regardless of which blob it came from.  Returns
+    the raw (num_chunks, chunk_elems) matrix in the blob's element dtype;
+    callers that own a blob→row mapping scatter it back themselves.
+    """
+    dev, bits = table_inputs(table)
+    out = decode(dev, codec=table.codec, width=table.width,
+                 chunk_elems=table.chunk_elems, backend=backend,
+                 interpret=interpret, bits=bits)
+    return cast_table_output(table, out)
+
+
 def decode_blob(blob: fmt.CompressedBlob, backend: str = "xla",
                 interpret: bool = True) -> np.ndarray:
     """Host convenience: decode a CompressedBlob back to the original array."""
-    dev = {k: jnp.asarray(v) for k, v in blob.to_device().items()}
-    bits = int(blob.extras["bitpack_bits"][0]) if blob.codec == fmt.BITPACK else 0
-    out = decode(dev, codec=blob.codec, width=blob.width,
-                 chunk_elems=blob.chunk_elems, backend=backend,
-                 interpret=interpret, bits=bits)
-    out = np.asarray(out)
-    if blob.codec == fmt.BITPACK:
-        out = out.astype({1: np.uint8, 2: np.uint16, 4: np.uint32}[blob.width])
-    return fmt.reassemble(blob, out)
+    return fmt.reassemble(blob, decode_table(blob, backend, interpret))

@@ -47,6 +47,30 @@ def test_compressed_checkpoint(tmp_path, codec):
         np.asarray(a), np.asarray(b)), s, got)
 
 
+def test_compressed_restore_is_batched(tmp_path):
+    """Restoring N compressed tensors coalesces into one decode dispatch per
+    codec group instead of one per tensor (CODAG provisioning)."""
+    from repro.kernels import ops
+
+    s = {f"layer{i}": jnp.asarray(np.repeat(np.arange(40, dtype=np.int32), 60))
+         for i in range(6)}
+    ckpt.save(str(tmp_path), 3, s, codec=fmt.RLE_V2)
+
+    with ops.count_dispatches() as calls:
+        got = ckpt.restore(str(tmp_path), 3, s)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), s, got)
+    # 6 same-key leaves -> exactly one fused dispatch carrying all chunks
+    assert len(calls) == 1
+
+    # bounded-memory variant: one dispatch per window of 2 leaves
+    with ops.count_dispatches() as calls:
+        got = ckpt.restore(str(tmp_path), 3, s, decode_window=2)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), s, got)
+    assert len(calls) == 3
+
+
 def test_retention(tmp_path):
     s = _state()
     for step in (1, 2, 3, 4, 5):

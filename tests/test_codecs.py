@@ -1,8 +1,12 @@
-"""Codec roundtrips: every codec x backend x dtype, + hypothesis properties."""
+"""Codec roundtrips: every codec x backend x dtype.
+
+Hypothesis property tests live in test_codecs_properties.py (guarded with
+``pytest.importorskip`` so the deterministic suite here never depends on
+hypothesis being installed).
+"""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as hst
 
 from repro.core import api, encoders as enc, format as fmt
 from repro.core.engine import CodagEngine, EngineConfig
@@ -36,8 +40,15 @@ ENGINES = {
 }
 
 
+# warp_xla + oracle stay in the fast tier; the interpret-mode Pallas engine
+# and the provisioning ablations are several seconds per case -> nightly.
+_FAST_ENGINES = ("warp_xla", "oracle")
+
+
 @pytest.mark.parametrize("codec", [fmt.RLE_V1, fmt.RLE_V2, fmt.TDEFLATE])
-@pytest.mark.parametrize("engine_name", list(ENGINES))
+@pytest.mark.parametrize("engine_name", [
+    e if e in _FAST_ENGINES else pytest.param(e, marks=pytest.mark.slow)
+    for e in ENGINES])
 def test_roundtrip_all_backends(codec, engine_name):
     eng = CodagEngine(ENGINES[engine_name])
     for name, arr in datasets().items():
@@ -75,60 +86,6 @@ def test_tdeflate_compresses_text():
     ca = api.compress(data, fmt.TDEFLATE)
     assert api.decompress(ca).tobytes() == data.tobytes()
     assert ca.ratio < 0.1
-
-
-# ---------------------------------------------------------------------------
-# hypothesis property tests (system invariant: decode(encode(x)) == x)
-# ---------------------------------------------------------------------------
-
-_eng = CodagEngine(EngineConfig())
-
-
-@settings(max_examples=25, deadline=None)
-@given(hst.lists(hst.integers(0, 255), min_size=1, max_size=2000),
-       hst.sampled_from([fmt.RLE_V1, fmt.RLE_V2, fmt.TDEFLATE]),
-       hst.sampled_from([64, 333, 1024]))
-def test_roundtrip_property_u8(data, codec, chunk_bytes):
-    arr = np.asarray(data, np.uint8)
-    ca = api.compress(arr, codec, chunk_bytes=chunk_bytes)
-    assert np.array_equal(api.decompress(ca, _eng), arr)
-
-
-@settings(max_examples=25, deadline=None)
-@given(hst.lists(
-    hst.tuples(hst.integers(0, 2 ** 32 - 1), hst.integers(1, 40)),
-    min_size=1, max_size=60),
-    hst.sampled_from([fmt.RLE_V1, fmt.RLE_V2]))
-def test_roundtrip_property_runs_u32(runs, codec):
-    arr = np.concatenate([np.repeat(np.uint32(v), l) for v, l in runs])
-    ca = api.compress(arr, codec, chunk_bytes=512)
-    assert np.array_equal(api.decompress(ca, _eng), arr)
-
-
-@settings(max_examples=20, deadline=None)
-@given(hst.integers(0, 2 ** 31), hst.integers(-500, 500),
-       hst.integers(4, 300))
-def test_roundtrip_property_arithmetic(base, delta, n):
-    arr = (base + delta * np.arange(n, dtype=np.int64)).astype(np.uint32)
-    ca = api.compress(arr, fmt.RLE_V2, chunk_bytes=512)
-    assert np.array_equal(api.decompress(ca, _eng), arr)
-
-
-@settings(max_examples=20, deadline=None)
-@given(hst.lists(hst.integers(0, 2 ** 16 - 1), min_size=1, max_size=1500),
-       hst.integers(1, 17))
-def test_bitpack_property(vals, bits):
-    arr = (np.asarray(vals, np.uint32) & ((1 << bits) - 1))
-    ca = api.compress(arr, fmt.BITPACK, chunk_bytes=777, bits=bits)
-    assert np.array_equal(api.decompress(ca, _eng), arr)
-
-
-@settings(max_examples=15, deadline=None)
-@given(hst.binary(min_size=1, max_size=3000))
-def test_tdeflate_property_bytes(data):
-    arr = np.frombuffer(data, np.uint8).copy()
-    ca = api.compress(arr, fmt.TDEFLATE, chunk_bytes=800)
-    assert api.decompress(ca, _eng).tobytes() == data
 
 
 def test_compressed_symbol_structure_table_v():

@@ -44,6 +44,29 @@ def test_loader_prefetch_thread():
     assert len(batches) == 4
 
 
+def test_windowed_batched_decode_matches_per_shard():
+    """decoded_shards(window=N) fuses shard chunks into batched dispatches
+    and must be bit-exact vs. the per-shard path, in the same order."""
+    from repro.core.engine import CodagEngine, EngineConfig
+    from repro.kernels import ops
+
+    toks = pipeline.synthetic_corpus(1 << 15, vocab=800, seed=7)
+    store = pipeline.CompressedTokenStore.build(
+        toks, 800, shard_tokens=1 << 12, codec=fmt.RLE_V2, chunk_bytes=2048)
+    assert len(store.blobs) >= 4
+    eng = CodagEngine(EngineConfig())
+    per_shard = list(store.decoded_shards(eng, window=1))
+
+    with ops.count_dispatches() as calls:
+        windowed = list(store.decoded_shards(eng, window=4))
+
+    assert len(windowed) == len(per_shard)
+    for a, b in zip(per_shard, windowed):
+        np.testing.assert_array_equal(a, b)
+    # all shards share one group key -> one dispatch per window of 4 shards
+    assert len(calls) == (len(store.blobs) + 3) // 4
+
+
 def test_tdeflate_token_store():
     toks = pipeline.synthetic_corpus(1 << 14, vocab=30000, seed=9)
     store = pipeline.CompressedTokenStore.build(

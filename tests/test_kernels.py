@@ -43,7 +43,10 @@ def _decode_both(blob: fmt.CompressedBlob, codec):
 @pytest.mark.parametrize("codec", [fmt.RLE_V1, fmt.RLE_V2])
 @pytest.mark.parametrize("dtype", [np.uint8, np.uint16, np.uint32])
 @pytest.mark.parametrize("kind", ["runs", "random", "delta", "mixed"])
-@pytest.mark.parametrize("n,chunk_bytes", [(257, 256), (1024, 512), (4096, 2048)])
+@pytest.mark.parametrize("n,chunk_bytes", [
+    (257, 256),
+    pytest.param(1024, 512, marks=pytest.mark.slow),
+    pytest.param(4096, 2048, marks=pytest.mark.slow)])
 def test_rle_kernel_vs_oracle(codec, dtype, kind, n, chunk_bytes):
     arr = _gen(kind, n, dtype)
     blob = enc.compress(arr, codec, chunk_bytes=chunk_bytes)
@@ -58,7 +61,8 @@ def test_rle_kernel_vs_oracle(codec, dtype, kind, n, chunk_bytes):
 
 
 @pytest.mark.parametrize("kind", ["runs", "random", "mixed"])
-@pytest.mark.parametrize("n,chunk_bytes", [(700, 512), (3000, 1024)])
+@pytest.mark.parametrize("n,chunk_bytes", [
+    (700, 512), pytest.param(3000, 1024, marks=pytest.mark.slow)])
 def test_tdeflate_kernel_vs_oracle(kind, n, chunk_bytes):
     arr = _gen(kind, n, np.uint8)
     blob = enc.compress(arr, fmt.TDEFLATE, chunk_bytes=chunk_bytes)
@@ -71,7 +75,8 @@ def test_tdeflate_kernel_vs_oracle(kind, n, chunk_bytes):
 
 
 @pytest.mark.parametrize("bits", [1, 3, 7, 8, 13, 16, 24, 32])
-@pytest.mark.parametrize("n", [100, 2048, 5000])
+@pytest.mark.parametrize("n", [100, 2048,
+                               pytest.param(5000, marks=pytest.mark.slow)])
 def test_bitpack_kernel_vs_oracle(bits, n):
     maxv = (1 << bits) - 1 if bits < 32 else 2 ** 32 - 1
     arr = RNG.integers(0, maxv, n, endpoint=True).astype(np.uint32)

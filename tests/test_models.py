@@ -39,6 +39,7 @@ def test_forward_shapes_no_nans(arch):
     assert not bool(jnp.any(jnp.isnan(logits)))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCHS)
 def test_train_step_runs_and_is_finite(arch):
     cfg = reduced(get_arch(arch))
@@ -59,6 +60,7 @@ def test_train_step_runs_and_is_finite(arch):
     assert max(jax.tree.leaves(d)) > 0
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCHS)
 def test_decode_matches_forward(arch):
     cfg = reduced(get_arch(arch))
@@ -79,6 +81,7 @@ def test_decode_matches_forward(arch):
                                rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["qwen3-1.7b", "qwen3-moe-235b-a22b",
                                   "zamba2-2.7b", "rwkv6-1.6b"])
 def test_unroll_matches_scan(arch):
@@ -94,6 +97,7 @@ def test_unroll_matches_scan(arch):
                                rtol=1e-5, atol=1e-6)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["qwen3-1.7b", "zamba2-2.7b"])
 def test_decode_unroll_matches_scan(arch):
     cfg = reduced(get_arch(arch))
@@ -110,6 +114,7 @@ def test_decode_unroll_matches_scan(arch):
                                    rtol=1e-4, atol=1e-5)
 
 
+@pytest.mark.slow
 def test_block_skip_is_exact():
     """Triangular block skipping must not change attention numerics."""
     cfg = reduced(get_arch("qwen3-1.7b"))
@@ -123,6 +128,7 @@ def test_block_skip_is_exact():
     np.testing.assert_allclose(float(a), float(b), rtol=1e-6)
 
 
+@pytest.mark.slow
 def test_chunked_ssd_matches_step_scan():
     """§Perf hillclimb 3: the chunkwise-parallel SSD path is numerically
     equivalent to the per-step recurrence."""
@@ -141,6 +147,7 @@ def test_chunked_ssd_matches_step_scan():
                                    rtol=1e-4, atol=1e-5)
 
 
+@pytest.mark.slow
 def test_moe_decode_global_matches_grouped():
     """§Perf hillclimb 2: global decode dispatch == per-group dispatch
     (single host device: G is 1 either way structurally, but the flag path
@@ -159,6 +166,7 @@ def test_moe_decode_global_matches_grouped():
                                rtol=1e-5, atol=1e-6)
 
 
+@pytest.mark.slow
 def test_loss_decreases_on_overfit():
     cfg = reduced(get_arch("olmo-1b"))
     params = model.init_params(cfg, KEY)
