@@ -1,4 +1,4 @@
-"""§V-E and §V-F ablations.
+"""§V-E and §V-F ablations, driven by the codec registry.
 
 ablation_decode (§V-E): all-thread (vectorized two-phase expansion) vs
 single-thread decoding, both at warp-unit provisioning.  Paper: all-thread
@@ -8,17 +8,27 @@ larger because a scalar while-loop step is the worst case for both.
 ablation_unit (§V-F): warp-unit vs block-unit provisioning (both all-thread)
 + a pool-size sweep — the paper's finding that finer decompression units win
 because more independent streams are in flight.
+
+The codec matrix is ``registry.names()`` — every registered codec (including
+any future plugin) is measured on its own ``demo_data`` workload, so a new
+codec lands in the ablation suite with zero changes here.
+
+    PYTHONPATH=src python -m benchmarks.ablations [--smoke] [--out FILE.json]
+
+Emits ``name,value,derived`` CSV rows and, with --out, a JSON artifact (the
+CI perf-trajectory file BENCH_ablations.json).
 """
 from __future__ import annotations
 
+import argparse
+import json
+from pathlib import Path
+
 import jax.numpy as jnp
 
-from benchmarks.common import compressed_corpus, geomean, timeit
-from repro.core import format as fmt
+from benchmarks.common import codec_matrix, demo_corpus, geomean, timeit
+from repro.core import registry
 from repro.core.engine import CodagEngine, EngineConfig
-
-CODECS = (fmt.RLE_V1, fmt.RLE_V2, fmt.TDEFLATE)
-DATASETS_SMALL = ("MC0", "TPC", "HRG")   # paper's §V-E uses MC0/TPC
 
 
 def _tp(engine_cfg: EngineConfig, ca) -> float:
@@ -26,53 +36,78 @@ def _tp(engine_cfg: EngineConfig, ca) -> float:
     total = 0.0
     for blob in ca.blobs:
         dev = {k: jnp.asarray(v) for k, v in blob.to_device().items()}
+        bits = registry.get(blob.codec).static_bits(blob)
 
         def run():
             return eng.decompress_chunks(dev, codec=blob.codec,
                                          width=blob.width,
-                                         chunk_elems=blob.chunk_elems)
+                                         chunk_elems=blob.chunk_elems,
+                                         bits=bits)
 
         total += blob.uncompressed_bytes / timeit(run)
     return total / len(ca.blobs)
 
 
 def run_decode_ablation(size_mb: float = 0.5):
-    corpus = compressed_corpus(size_mb, CODECS)
+    corpus = demo_corpus(size_mb)
     rows = []
-    for codec in CODECS:
-        sps = []
-        for name in DATASETS_SMALL:
-            ca = corpus[codec][name]
-            tp_all = _tp(EngineConfig(unit="warp", all_thread=True), ca)
-            tp_one = _tp(EngineConfig(unit="warp", all_thread=False), ca)
-            sps.append(tp_all / tp_one)
-            rows.append((f"ablation_decode/{codec}/{name}/allthread_over_single",
-                         tp_all / tp_one, tp_all / 1e6))
-        rows.append((f"ablation_decode/{codec}/geomean",
-                     geomean(sps), geomean(sps)))
+    sps = []
+    for name, ca in corpus.items():
+        tp_all = _tp(EngineConfig(unit="warp", all_thread=True), ca)
+        tp_one = _tp(EngineConfig(unit="warp", all_thread=False), ca)
+        sps.append(tp_all / tp_one)
+        rows.append((f"ablation_decode/{name}/allthread_over_single",
+                     tp_all / tp_one, tp_all / 1e6))
+    rows.append(("ablation_decode/geomean", geomean(sps), len(sps)))
     return rows
 
 
 def run_unit_ablation(size_mb: float = 0.5):
-    corpus = compressed_corpus(size_mb, CODECS)
+    corpus = demo_corpus(size_mb)
     rows = []
-    for codec in CODECS:
-        sps = []
-        for name in DATASETS_SMALL:
-            ca = corpus[codec][name]
-            tp_warp = _tp(EngineConfig(unit="warp", all_thread=True), ca)
-            tp_block = _tp(EngineConfig(unit="block", n_units=8,
-                                        all_thread=True), ca)
-            sps.append(tp_warp / tp_block)
-            rows.append((f"ablation_unit/{codec}/{name}/warp_over_block",
-                         tp_warp / tp_block, tp_warp / 1e6))
-        rows.append((f"ablation_unit/{codec}/geomean",
-                     geomean(sps), geomean(sps)))
-        # pool-size sweep on one dataset (finer units -> more streams)
-        ca = corpus[codec]["MC0"]
-        for n_units in (1, 4, 16, 64):
-            tp = _tp(EngineConfig(unit="block", n_units=n_units,
-                                  all_thread=True), ca)
-            rows.append((f"ablation_unit/{codec}/MC0/pool{n_units}_MBps",
-                         tp / 1e6, n_units))
+    sps = []
+    for name, ca in corpus.items():
+        tp_warp = _tp(EngineConfig(unit="warp", all_thread=True), ca)
+        tp_block = _tp(EngineConfig(unit="block", n_units=8,
+                                    all_thread=True), ca)
+        sps.append(tp_warp / tp_block)
+        rows.append((f"ablation_unit/{name}/warp_over_block",
+                     tp_warp / tp_block, tp_warp / 1e6))
+    rows.append(("ablation_unit/geomean", geomean(sps), len(sps)))
+    # pool-size sweep on one run-heavy codec (finer units -> more streams)
+    ca = corpus[codec_matrix()[0]]
+    for n_units in (1, 4, 16, 64):
+        tp = _tp(EngineConfig(unit="block", n_units=n_units,
+                              all_thread=True), ca)
+        rows.append((f"ablation_unit/{codec_matrix()[0]}/pool{n_units}_MBps",
+                     tp / 1e6, n_units))
     return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI: finishes in a few minutes")
+    ap.add_argument("--size-mb", type=float, default=0.5)
+    ap.add_argument("--out", default=None, help="also write a JSON artifact")
+    args = ap.parse_args()
+    if args.smoke:
+        args.size_mb = 0.03
+
+    rows = run_decode_ablation(args.size_mb) + run_unit_ablation(args.size_mb)
+    print("name,value,derived")
+    for name, value, derived in rows:
+        print(f"{name},{value},{derived}")
+
+    if args.out:
+        payload = {name: value for name, value, _ in rows}
+        payload["smoke"] = bool(args.smoke)
+        payload["codecs"] = list(codec_matrix())
+        out = Path(args.out)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps(payload, indent=2))
+        print(f"# wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

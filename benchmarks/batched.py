@@ -20,29 +20,24 @@ from pathlib import Path
 
 import numpy as np
 
-from repro.core import api, format as fmt
+from benchmarks.common import codec_matrix, demo_elems
+from repro.core import api, registry
 from repro.core.engine import CodagEngine, EngineConfig
 from repro.kernels import ops
 
 
 def build_restore_set(n_arrays: int, kb_per_array: int, seed: int = 0):
-    """Mixed-codec arrays shaped like a model-state restore."""
+    """Mixed-codec arrays shaped like a model-state restore: every
+    registered codec contributes its own ``demo_data`` workload."""
     rng = np.random.default_rng(seed)
-    codecs = [fmt.RLE_V1, fmt.RLE_V2, fmt.TDEFLATE, fmt.BITPACK]
+    codecs = codec_matrix()
     arrays, chosen = [], []
     for i in range(n_arrays):
-        codec = codecs[i % len(codecs)]
-        n = (kb_per_array * 1024) // 4
-        if codec == fmt.TDEFLATE:
-            arr = np.frombuffer((b"layer_%d " % i) * (kb_per_array * 128),
-                                np.uint8)[: kb_per_array * 1024].copy()
-        elif codec == fmt.BITPACK:
-            arr = rng.integers(0, 2 ** 9, n).astype(np.uint32)
-        else:
-            vals = rng.integers(0, 100, max(4, n // 50)).astype(np.uint32)
-            arr = np.repeat(vals, rng.integers(1, 100, len(vals)))[:n]
-        arrays.append(arr)
-        chosen.append(codec)
+        name = codecs[i % len(codecs)]
+        codec = registry.get(name)
+        arrays.append(codec.demo_data(demo_elems(codec, kb_per_array * 1024),
+                                      rng))
+        chosen.append(name)
     return arrays, chosen
 
 

@@ -1,6 +1,7 @@
-"""Shared benchmark machinery: timing, dataset/blob caching."""
+"""Shared benchmark machinery: timing, dataset/blob caching, codec matrix."""
 from __future__ import annotations
 
+import functools
 import pickle
 import time
 from pathlib import Path
@@ -8,10 +9,33 @@ from pathlib import Path
 import jax
 import numpy as np
 
-from repro.core import api
+from repro.core import api, registry
 from benchmarks import datasets as ds
 
 CACHE = Path("experiments/.bench_cache")
+
+
+def codec_matrix() -> tuple:
+    """The registry-complete codec list (checked by CI for completeness)."""
+    return tuple(registry.names())
+
+
+def demo_elems(codec, n_bytes: int) -> int:
+    """Element count so ``codec.demo_data`` yields ~n_bytes uncompressed."""
+    return max(1024, n_bytes // (1 if codec.byte_stream else 4))
+
+
+@functools.lru_cache(maxsize=8)
+def demo_corpus(size_mb: float, chunk_bytes: int = 16 * 1024, seed: int = 0):
+    """{codec: CompressedArray} of codec-appropriate demo data (memoized —
+    the host encoders are the slow python part)."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    for name in codec_matrix():
+        codec = registry.get(name)
+        arr = codec.demo_data(demo_elems(codec, int(size_mb * (1 << 20))), rng)
+        out[name] = api.compress(arr, name, chunk_bytes)
+    return out
 
 
 def timeit(fn, *args, iters: int = 3, warmup: int = 1):

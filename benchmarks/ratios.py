@@ -1,56 +1,36 @@
 """Table V analogue: compression ratios + average compressed symbol length
-across the Table IV-style dataset suite."""
+across the Table IV-style dataset suite, for every registered codec."""
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import compressed_corpus
-from repro.core import format as fmt
-
-CODECS = (fmt.RLE_V1, fmt.RLE_V2, fmt.TDEFLATE)
+from benchmarks.common import codec_matrix, compressed_corpus
+from repro.core import registry
 
 
 def _avg_symbol_len(blob) -> float:
-    """uncompressed bytes per compressed group/token (Table V right half)."""
-    # groups estimated from the encoder's control structure: sample-decode
-    # group count by parsing headers host-side (cheap numpy walk).
+    """uncompressed bytes per compressed group/token (Table V right half).
+
+    Uses the codec's registered host-side header walk; codecs without one
+    (token-structured streams like tdeflate) report NaN.
+    """
+    count = registry.get(blob.codec).count_groups
+    if count is None:
+        return float("nan")
     total_groups = 0
     for i in range(blob.num_chunks):
         row = blob.comp[i, : int(blob.comp_lens[i])]
-        pos, groups = 0, 0
-        if blob.codec == fmt.RLE_V1:
-            w = blob.width
-            while pos < len(row):
-                c = int(row[pos])
-                pos += 1 + (w if c < 128 else (256 - c) * w)
-                groups += 1
-        elif blob.codec == fmt.RLE_V2:
-            w = blob.width
-            while pos < len(row):
-                h = int(row[pos])
-                mode, f = h >> 6, h & 63
-                if mode == 2:
-                    pos += 1 + (f + 1) * w
-                elif mode == 1:
-                    pos += 1 + 2 * w
-                elif mode == 3:
-                    pos += 2 + w
-                else:
-                    pos += 1 + w
-                groups += 1
-        else:
-            return float("nan")
-        total_groups += max(groups, 1)
+        total_groups += max(count(row, blob.width), 1)
     return blob.uncompressed_bytes / max(total_groups, 1)
 
 
 def run(size_mb: float = 1.0):
-    corpus = compressed_corpus(size_mb, CODECS)
+    corpus = compressed_corpus(size_mb, codec_matrix())
     rows = []
-    for codec in CODECS:
+    for codec in codec_matrix():
         for name, ca in corpus[codec].items():
             rows.append((f"ratio/{codec}/{name}", ca.ratio, 0))
-            if codec != fmt.TDEFLATE:
+            if registry.get(codec).count_groups is not None:
                 asl = float(np.mean([_avg_symbol_len(b) for b in ca.blobs]))
                 rows.append((f"symlen/{codec}/{name}", asl, 0))
     return rows

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from benchmarks.common import compressed_corpus, geomean, timeit
 from repro.core import format as fmt
+from repro.core import registry
 from repro.core.engine import CodagEngine, EngineConfig
 
 CODECS = (fmt.RLE_V1, fmt.RLE_V2, fmt.TDEFLATE)
@@ -29,8 +30,7 @@ ENGINES = {
 
 def _bench_blob(engine: CodagEngine, blob) -> float:
     dev = {k: jnp.asarray(v) for k, v in blob.to_device().items()}
-    bits = (int(blob.extras["bitpack_bits"][0])
-            if blob.codec == fmt.BITPACK else 0)
+    bits = registry.get(blob.codec).static_bits(blob)
 
     def run():
         return engine.decompress_chunks(dev, codec=blob.codec,

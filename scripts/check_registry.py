@@ -1,0 +1,78 @@
+"""Registry-completeness CI gate.
+
+Fails (exit 1) if any registered codec is missing from:
+  * the fast-tier test matrix (tests/test_codecs.py parametrizes over
+    ``registry.names()`` — verified here by importing its module-level
+    matrix), or
+  * the bench-smoke matrices (benchmarks/batched.py, benchmarks/ablations.py).
+
+Also validates that every codec's plugin surface is complete enough for
+those matrices to actually exercise it (encode/decode hooks + demo data).
+
+    PYTHONPATH=src python scripts/check_registry.py
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+_ROOT = Path(__file__).resolve().parent.parent
+for _p in (str(_ROOT), str(_ROOT / "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+
+def main() -> int:
+    import numpy as np
+
+    from repro.core import api, format as fmt, registry
+
+    problems: list[str] = []
+    names = set(registry.names())
+
+    # every built-in must be registered; EXTRA (third-party) codecs are fine
+    # as long as they appear in the matrices below.
+    if not set(fmt.CODECS) <= names:
+        problems.append(
+            f"built-ins {sorted(set(fmt.CODECS) - names)} missing from registry")
+
+    # fast-tier test matrix
+    sys.path.insert(0, str(_ROOT / "tests"))
+    try:
+        import test_codecs
+        if set(test_codecs.ALL_CODECS) != names:
+            problems.append(
+                f"fast-tier matrix {sorted(test_codecs.ALL_CODECS)} missing codecs")
+    finally:
+        sys.path.pop(0)
+
+    # bench-smoke matrices
+    from benchmarks import ablations, batched
+    for mod in (batched, ablations):
+        matrix = set(mod.codec_matrix())
+        if matrix != names:
+            problems.append(f"{mod.__name__} matrix {sorted(matrix)} != registry")
+
+    # plugin surface completeness + a tiny end-to-end round trip per codec
+    rng = np.random.default_rng(0)
+    for name in sorted(names):
+        codec = registry.get(name)
+        if codec.demo_data is None:
+            problems.append(f"{name}: no demo_data (bench matrices need it)")
+            continue
+        arr = codec.demo_data(256, rng)
+        ca = api.compress(arr, name, chunk_bytes=512)
+        out = api.decompress(ca)
+        if not np.array_equal(out, arr):
+            problems.append(f"{name}: demo round trip is not bit-exact")
+
+    if problems:
+        for p in problems:
+            print(f"REGISTRY CHECK FAILED: {p}", file=sys.stderr)
+        return 1
+    print(f"registry complete: {sorted(names)}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -23,7 +23,7 @@ import jax
 import numpy as np
 
 from repro.core import api as codec_api
-from repro.core import format as fmt
+from repro.core import registry
 from repro.core.engine import CodagEngine, EngineConfig
 
 MANIFEST = "manifest.json"
@@ -61,9 +61,10 @@ def save(ckpt_dir: str, step: int, state, *, codec: str = "none",
                      "shape": list(arr.shape), "codec": "none"}
             if codec != "none" and arr.nbytes >= 1024:
                 import pickle
+                # byte-stream codecs take any dtype as raw bytes
                 ca = codec_api.compress(
                     arr.reshape(-1).view(np.uint8)
-                    if codec == fmt.TDEFLATE else arr, codec)
+                    if registry.get(codec).byte_stream else arr, codec)
                 with open(tmp / (fn + ".blob"), "wb") as f:
                     pickle.dump(ca, f)
                 entry["codec"] = codec

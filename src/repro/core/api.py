@@ -20,6 +20,7 @@ import numpy as np
 from repro.core import batch as batch_mod
 from repro.core import encoders as enc
 from repro.core import format as fmt
+from repro.core import registry
 from repro.core.engine import CodagEngine, EngineConfig
 
 
@@ -44,7 +45,7 @@ class CompressedArray:
 def compress(arr: np.ndarray, codec: str,
              chunk_bytes: int = fmt.DEFAULT_CHUNK_BYTES,
              bits: Optional[int] = None) -> CompressedArray:
-    if arr.dtype.itemsize == 8 and codec in (fmt.RLE_V1, fmt.RLE_V2):
+    if arr.dtype.itemsize == 8 and registry.get(codec).plane_decompose_64:
         # plane decomposition: lo/hi u32 planes keep runs intact
         as_u64 = arr.reshape(-1).view(np.uint64)
         lo = (as_u64 & np.uint64(0xFFFFFFFF)).astype(np.uint32)

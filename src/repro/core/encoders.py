@@ -456,49 +456,72 @@ def encode_bitpack_chunk(x: np.ndarray, bits: int) -> bytes:
 
 
 # --------------------------------------------------------------------------
-# top-level compress()
+# per-codec blob builders (each registered as its plugin's ``encode`` hook)
+# --------------------------------------------------------------------------
+
+
+def compress_rle_v1(arr: np.ndarray,
+                    chunk_bytes: int = fmt.DEFAULT_CHUNK_BYTES,
+                    bits: int | None = None) -> fmt.CompressedBlob:
+    chunks, chunk_elems, width, _ = fmt.chunk_array(arr, chunk_bytes)
+    encoded = [encode_rle_v1_chunk(c, width) for c in chunks]
+    return fmt.build_blob(fmt.RLE_V1, arr, encoded, chunk_elems, width)
+
+
+def compress_rle_v2(arr: np.ndarray,
+                    chunk_bytes: int = fmt.DEFAULT_CHUNK_BYTES,
+                    bits: int | None = None) -> fmt.CompressedBlob:
+    chunks, chunk_elems, width, _ = fmt.chunk_array(arr, chunk_bytes)
+    encoded = [encode_rle_v2_chunk(c, width) for c in chunks]
+    return fmt.build_blob(fmt.RLE_V2, arr, encoded, chunk_elems, width)
+
+
+def compress_tdeflate(arr: np.ndarray,
+                      chunk_bytes: int = fmt.DEFAULT_CHUNK_BYTES,
+                      bits: int | None = None) -> fmt.CompressedBlob:
+    chunks, chunk_elems, width, _ = fmt.chunk_array(arr, chunk_bytes)
+    # tdeflate is a byte codec: re-chunk at byte granularity
+    chunks = [np.ascontiguousarray(c).view(np.uint8) for c in chunks]
+    luts_ls, luts_lb, luts_ds, luts_db = [], [], [], []
+    hdr_l, hdr_d = [], []
+    payloads = []
+    for c in chunks:
+        payload, llen, dlen = encode_tdeflate_chunk(c)
+        payloads.append(payload)
+        ls, lb = build_decode_lut(llen.astype(np.int32))
+        ds, db = build_decode_lut(dlen.astype(np.int32))
+        luts_ls.append(ls); luts_lb.append(lb)
+        luts_ds.append(ds); luts_db.append(db)
+        hdr_l.append(llen); hdr_d.append(dlen)
+    extras = {
+        "lut_lsym": np.stack(luts_ls), "lut_lbits": np.stack(luts_lb),
+        "lut_dsym": np.stack(luts_ds), "lut_dbits": np.stack(luts_db),
+        "hdr_llen": np.stack(hdr_l), "hdr_dlen": np.stack(hdr_d),
+    }
+    total_bytes = sum(int(c.shape[0]) for c in chunks)
+    return fmt.build_blob(fmt.TDEFLATE, arr, payloads, chunk_elems * width,
+                          1, extras, total_elems=total_bytes)
+
+
+def compress_bitpack(arr: np.ndarray,
+                     chunk_bytes: int = fmt.DEFAULT_CHUNK_BYTES,
+                     bits: int | None = None) -> fmt.CompressedBlob:
+    chunks, chunk_elems, width, _ = fmt.chunk_array(arr, chunk_bytes)
+    if bits is None:
+        maxv = max((int(c.max()) for c in chunks if c.size), default=0)
+        bits = max(1, maxv.bit_length())
+    encoded = [encode_bitpack_chunk(c, bits) for c in chunks]
+    extras = {"bitpack_bits": np.full((1,), bits, np.int32)}
+    return fmt.build_blob(fmt.BITPACK, arr, encoded, chunk_elems, width, extras)
+
+
+# --------------------------------------------------------------------------
+# top-level compress(): pure registry dispatch, no per-codec branches
 # --------------------------------------------------------------------------
 
 
 def compress(arr: np.ndarray, codec: str,
              chunk_bytes: int = fmt.DEFAULT_CHUNK_BYTES,
              bits: int | None = None) -> fmt.CompressedBlob:
-    chunks, chunk_elems, width, dev_dtype = fmt.chunk_array(arr, chunk_bytes)
-    extras: Dict[str, np.ndarray] = {}
-    encoded: List[bytes] = []
-    if codec == fmt.RLE_V1:
-        encoded = [encode_rle_v1_chunk(c, width) for c in chunks]
-    elif codec == fmt.RLE_V2:
-        encoded = [encode_rle_v2_chunk(c, width) for c in chunks]
-    elif codec == fmt.TDEFLATE:
-        # tdeflate is a byte codec: re-chunk at byte granularity
-        chunks = [np.ascontiguousarray(c).view(np.uint8) for c in chunks]
-        luts_ls, luts_lb, luts_ds, luts_db = [], [], [], []
-        hdr_l, hdr_d = [], []
-        payloads = []
-        for c in chunks:
-            payload, llen, dlen = encode_tdeflate_chunk(c)
-            payloads.append(payload)
-            ls, lb = build_decode_lut(llen.astype(np.int32))
-            ds, db = build_decode_lut(dlen.astype(np.int32))
-            luts_ls.append(ls); luts_lb.append(lb)
-            luts_ds.append(ds); luts_db.append(db)
-            hdr_l.append(llen); hdr_d.append(dlen)
-        encoded = payloads
-        extras = {
-            "lut_lsym": np.stack(luts_ls), "lut_lbits": np.stack(luts_lb),
-            "lut_dsym": np.stack(luts_ds), "lut_dbits": np.stack(luts_db),
-            "hdr_llen": np.stack(hdr_l), "hdr_dlen": np.stack(hdr_d),
-        }
-        total_bytes = sum(int(c.shape[0]) for c in chunks)
-        return fmt.build_blob(fmt.TDEFLATE, arr, encoded, chunk_elems * width,
-                              1, extras, total_elems=total_bytes)
-    elif codec == fmt.BITPACK:
-        if bits is None:
-            maxv = max((int(c.max()) for c in chunks if c.size), default=0)
-            bits = max(1, maxv.bit_length())
-        encoded = [encode_bitpack_chunk(c, bits) for c in chunks]
-        extras = {"bitpack_bits": np.full((1,), bits, np.int32)}
-    else:
-        raise ValueError(f"unknown codec {codec}")
-    return fmt.build_blob(codec, arr, encoded, chunk_elems, width, extras)
+    from repro.core import registry
+    return registry.get(codec).encode(arr, chunk_bytes, bits=bits)

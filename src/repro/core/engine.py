@@ -97,7 +97,7 @@ class CodagEngine:
         out = self.decompress_chunks(dev, codec=table.codec,
                                      width=table.width,
                                      chunk_elems=table.chunk_elems, bits=bits)
-        return ops.cast_table_output(table, jax.device_get(out))
+        return np.asarray(jax.device_get(out))
 
     def decompress(self, blob: fmt.CompressedBlob) -> np.ndarray:
         """Host convenience: full round trip back to the original ndarray."""

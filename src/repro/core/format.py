@@ -17,14 +17,18 @@ from typing import Any, Dict, Optional
 
 import numpy as np
 
+from repro.core import registry
+
 DEFAULT_CHUNK_BYTES = 128 * 1024  # 128 KiB, same as the paper's evaluation
 
-# Codec registry keys.
+# Codec registry keys (the authoritative per-codec metadata lives in
+# ``repro.core.registry``; these are just the canonical name constants).
 RLE_V1 = "rle_v1"
 RLE_V2 = "rle_v2"
 TDEFLATE = "tdeflate"
 BITPACK = "bitpack"
-CODECS = (RLE_V1, RLE_V2, TDEFLATE, BITPACK)
+DBP = "dbp"
+CODECS = (RLE_V1, RLE_V2, TDEFLATE, BITPACK, DBP)
 
 # Widths supported on device. 8-byte dtypes are transparently viewed as two
 # 4-byte lanes (TPUs have no 64-bit vector type; runs of u64 are runs of the
@@ -100,7 +104,7 @@ class CompressedBlob:
             "comp_lens": self.comp_lens.astype(np.int32),
             "out_lens": self.out_lens.astype(np.int32),
         }
-        if self.codec in (TDEFLATE, BITPACK):
+        if registry.get(self.codec).needs_words:
             # bit codecs consume uint32 words (input_stream funnel loads)
             out["comp_words"] = np.ascontiguousarray(comp).view(np.uint32)
         out.update(self.extras)
@@ -111,9 +115,10 @@ def group_key(blob: "CompressedBlob") -> tuple:
     """Batching key: blobs with equal keys share one decode dispatch.
 
     Everything static to ``ops.decode`` must be in the key — codec, element
-    width, chunk geometry, and (for bitpack) the bit width.
+    width, chunk geometry, and the codec's own static decode parameter
+    (``registry.Codec.static_bits``, e.g. bitpack's bit width).
     """
-    bits = int(blob.extras["bitpack_bits"][0]) if blob.codec == BITPACK else 0
+    bits = registry.get(blob.codec).static_bits(blob)
     return (blob.codec, blob.width, blob.chunk_elems, bits)
 
 
@@ -150,11 +155,12 @@ def concat_blobs(blobs: list["CompressedBlob"]) -> "CompressedBlob":
         comp[row:row + b.num_chunks, : b.comp.shape[1]] = b.comp
         row += b.num_chunks
     extras: Dict[str, np.ndarray] = {}
+    shared = registry.get(blobs[0].codec).shared_extras
     for k, v0 in blobs[0].extras.items():
-        if k.startswith(("lut_", "hdr_")):   # per-chunk tables: stack rows
-            extras[k] = np.concatenate([b.extras[k] for b in blobs], axis=0)
-        else:                                # shared scalars (bitpack_bits)
+        if k in shared:      # group-wide scalars (e.g. bitpack_bits)
             extras[k] = v0
+        else:                # per-chunk tables: stack rows
+            extras[k] = np.concatenate([b.extras[k] for b in blobs], axis=0)
     total_elems = sum(b.total_elems for b in blobs)
     return CompressedBlob(
         codec=blobs[0].codec,

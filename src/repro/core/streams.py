@@ -93,6 +93,20 @@ def read_value_at(data: jnp.ndarray, pos, width: int) -> jnp.ndarray:
     return v
 
 
+def gather_values(data: jnp.ndarray, byte_offs, width: int) -> jnp.ndarray:
+    """Vector-assemble little-endian fixed-width values at byte offsets.
+
+    The shared multi-byte literal gather of the two-phase expansion: every
+    lane reads its own ``width``-byte little-endian value independently.
+    ``byte_offs`` may be a scalar or any int32 array (shape is preserved).
+    """
+    v = jnp.take(data, byte_offs, mode="clip").astype(jnp.uint32)
+    for i in range(1, width):
+        v = v | (jnp.take(data, byte_offs + i, mode="clip").astype(jnp.uint32)
+                 << jnp.uint32(8 * i))
+    return v
+
+
 # --------------------------------------------------------------------------
 # output_stream
 # --------------------------------------------------------------------------

@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.optim import adamw, grad_compress
+from repro.optim import grad_compress
 
 
 @dataclasses.dataclass(frozen=True)

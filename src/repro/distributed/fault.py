@@ -20,7 +20,7 @@ from __future__ import annotations
 import dataclasses
 import statistics
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Callable, List, Optional
 
 
 class WorkerFailure(RuntimeError):

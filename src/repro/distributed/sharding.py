@@ -23,7 +23,6 @@ import re
 from typing import Optional
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 _CTX: dict = {"mesh": None, "policy": "tp"}

@@ -17,7 +17,13 @@ import functools
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 from jax.experimental import pallas as pl
+
+from repro.core import encoders as enc
+from repro.core import format as fmt
+from repro.core import registry
+from repro.kernels import harness, ref
 
 TILE = 2048
 
@@ -58,3 +64,63 @@ def unpack_pallas(words: jnp.ndarray, *, bits: int, out_elems: int,
         interpret=interpret,
     )(words)
     return out[:, :out_elems]
+
+
+# --------------------------------------------------------------------------
+# registry plumbing: DecodeSpec bodies + the Codec entry
+# --------------------------------------------------------------------------
+
+
+def _body(inputs, consts, out_len, *, chunk_elems, width, bits):
+    (words,) = inputs
+    out = unpack_tile(words, jnp.int32(0), chunk_elems, bits)
+    return out.astype(harness.DEV_DTYPE[width])
+
+
+def _body_scalar(inputs, consts, out_len, *, chunk_elems, width, bits):
+    """§V-E single-thread baseline: one element unpacked per loop step."""
+    (words,) = inputs
+    dt = harness.DEV_DTYPE[width]
+
+    def step(i, buf):
+        return buf.at[i].set(unpack_tile(words, i, 1, bits)[0].astype(dt))
+
+    return lax.fori_loop(0, out_len, step, jnp.zeros((chunk_elems,), dt))
+
+
+def _body_oracle(inputs, consts, out_len, *, chunk_elems, width, bits):
+    (words,) = inputs
+    return ref.unpack_bits(words, chunk_elems, bits).astype(
+        harness.DEV_DTYPE[width])
+
+
+def _pallas(body, inputs, consts, out_lens, *, chunk_elems, width, bits,
+            interpret):
+    """Hand-tuned override: the output-tiled kernel above (16-VREG tiles)
+    instead of the harness's one-chunk-per-cell generic wrapper."""
+    (words,) = inputs
+    out = unpack_pallas(words, bits=bits, out_elems=chunk_elems,
+                        interpret=interpret)
+    return out.astype(harness.DEV_DTYPE[width])
+
+
+def _demo_data(n, rng):
+    """Low-dynamic-range uint32s (gradient-index / quantized-state shaped)."""
+    return rng.integers(0, 1 << 9, n).astype("uint32")
+
+
+CODEC = registry.register(registry.Codec(
+    name=fmt.BITPACK,
+    encode=enc.compress_bitpack,
+    decode=harness.DecodeSpec(
+        body=_body,
+        body_scalar=_body_scalar,
+        body_oracle=_body_oracle,
+        chunk_inputs=harness.words_inputs,
+        pallas_override=_pallas,
+    ),
+    needs_words=True,
+    shared_extras=("bitpack_bits",),
+    static_bits=lambda blob: int(blob.extras["bitpack_bits"][0]),
+    demo_data=_demo_data,
+))

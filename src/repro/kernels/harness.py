@@ -1,0 +1,301 @@
+"""Two-phase decode harness — the shared machinery of every codec kernel.
+
+This module owns everything the paper's §IV-A framework claim says a codec
+author should NOT have to write:
+
+  * Phase 1 scaffolding   — the irreducibly-sequential leader loop: one
+    ``lax.while_loop`` step per compressed *group*, appending
+    ``(start, <codec fields>)`` rows to VMEM group tables.
+  * Phase 2 expansion     — the all-thread decode: scatter a marker at every
+    group start, prefix-sum it into a lane->group map, gather each group's
+    fields, and let every VPU lane evaluate the codec's value expression
+    independently (Table II's vectorized ``write_run``; literals ride the
+    shared multi-byte gather ``streams.gather_values``).
+  * the §V-E ablation     — a generic single-thread driver emitting one
+    element per loop step from the same parse/express hooks.
+  * a group-serial oracle — one group per step, vector-blend write: the
+    paper-faithful sequential reference, free for any two-phase codec.
+  * ONE ``pallas_call``   — the generic chunk-per-grid-cell wrapper: every
+    per-chunk operand gets a ``(1, row)`` BlockSpec (chunk i's HBM->VMEM DMA
+    double-buffers against chunk i-1's decode — CODAG's warp-per-chunk
+    provisioning), broadcast constants get index-map ``(0, 0)``.
+
+A two-phase codec (rle_v1, rle_v2, dbp) supplies a ``TwoPhaseSpec`` — a
+header parse and a value expression — and gets all four backends.  Codecs
+whose Phase 2 is not lane-independent (tdeflate's LZ copies) or that need no
+Phase 1 at all (bitpack) plug custom chunk bodies into the same
+``DecodeSpec`` interface instead.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+DEV_DTYPE = {1: jnp.uint8, 2: jnp.uint16, 4: jnp.uint32}
+
+
+def words_view(comp: jnp.ndarray) -> jnp.ndarray:
+    """(n, C) uint8 -> (n, ceil(C/4)) uint32 little-endian word view.
+
+    Rows whose byte width is not a multiple of 4 are zero-padded up to the
+    next word boundary (trailing partial words read as if the row were
+    zero-extended, which is how every bit codec's padding behaves).
+    """
+    n, c = comp.shape
+    if c % 4:
+        comp = jnp.pad(comp, ((0, 0), (0, 4 - c % 4)))
+        c = comp.shape[1]
+    b = comp.reshape(n, c // 4, 4).astype(jnp.uint32)
+    return (b[..., 0] | (b[..., 1] << 8) | (b[..., 2] << 16) | (b[..., 3] << 24))
+
+
+# --------------------------------------------------------------------------
+# TwoPhaseSpec: what a group-structured codec author writes
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Field:
+    """One per-group table column (beyond the harness-owned ``start``)."""
+
+    name: str
+    dtype: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TwoPhaseSpec:
+    """Header parse + value expression; the harness supplies the rest.
+
+    ``parse(comp, pos, width)`` reads ONE group header at byte ``pos`` and
+    returns a dict with ``"length"`` (elements this group expands to),
+    ``"advance"`` (total group bytes, header + payload), and one entry per
+    declared field.  ``express(comp, fields, k, width)`` computes element
+    ``k`` of a group from its gathered fields — it must be shape-polymorphic
+    (scalar ``k`` in the single-thread driver, a lane vector in Phase 2 and
+    the group-serial oracle) and return uint32.
+    """
+
+    fields: Tuple[Field, ...]
+    parse: Callable[..., Dict[str, jnp.ndarray]]
+    express: Callable[..., jnp.ndarray]
+    max_groups: Callable[[int], int]
+    max_group_len: int          # static lane-window bound (>= longest group)
+
+
+def two_phase_chunk(spec: TwoPhaseSpec, comp: jnp.ndarray, out_len_dyn,
+                    out_len_max: int, width: int) -> jnp.ndarray:
+    """Decode one chunk with the all-thread two-phase scheme (§IV-D)."""
+    MG = spec.max_groups(out_len_max)
+    dt = DEV_DTYPE[width]
+    names = [f.name for f in spec.fields]
+
+    # ---- Phase 1: sequential group parse -> group tables ------------------
+    def cond(s):
+        return jnp.logical_and(s[2] < out_len_dyn, s[1] < MG)
+
+    def body(s):
+        pos, g, cnt, starts = s[0], s[1], s[2], s[3]
+        tabs = s[4:]
+        p = spec.parse(comp, pos, width)
+        starts = starts.at[g].set(cnt)
+        tabs = tuple(t.at[g].set(p[n]) for t, n in zip(tabs, names))
+        return (pos + p["advance"], g + 1, cnt + p["length"], starts) + tabs
+
+    init = (jnp.int32(0), jnp.int32(0), jnp.int32(0),
+            jnp.full((MG,), out_len_max, jnp.int32),   # sentinel = out_len_max
+            *[jnp.zeros((MG,), f.dtype) for f in spec.fields])
+    final = lax.while_loop(cond, body, init)
+    starts, tabs = final[3], final[4:]
+
+    # ---- Phase 2: all-lane expansion --------------------------------------
+    # lane->group map: scatter a 1 at every group start, prefix-sum.
+    marker = jnp.zeros((out_len_max + 1,), jnp.int32).at[starts].add(1)
+    grp = jnp.cumsum(marker[:out_len_max]) - 1
+    idx = jnp.arange(out_len_max, dtype=jnp.int32)
+    k = idx - jnp.take(starts, grp, mode="clip")
+    fields = {n: jnp.take(t, grp, mode="clip") for n, t in zip(names, tabs)}
+    out = spec.express(comp, fields, k, width)
+    return jnp.where(idx < out_len_dyn, out, 0).astype(dt)
+
+
+def scalar_chunk(spec: TwoPhaseSpec, comp: jnp.ndarray, out_len_dyn,
+                 out_len_max: int, width: int) -> jnp.ndarray:
+    """§V-E baseline: a single decode 'thread' emits one element per step —
+    the serial-latency ablation, generic over any TwoPhaseSpec."""
+    dt = DEV_DTYPE[width]
+    names = [f.name for f in spec.fields]
+
+    def cond(s):
+        return s[1] < out_len_dyn
+
+    def body(s):
+        pos, cnt, k, rem, buf = s[0], s[1], s[2], s[3], s[4]
+        cur = dict(zip(names, s[5:]))
+        need = rem == 0
+        p = spec.parse(comp, pos, width)
+        cur = {n: jnp.where(need, p[n], cur[n]) for n in names}
+        rem = jnp.where(need, p["length"], rem)
+        k = jnp.where(need, 0, k)
+        pos = jnp.where(need, pos + p["advance"], pos)
+        v = spec.express(comp, cur, k, width)
+        buf = buf.at[cnt].set(v.astype(dt))
+        return (pos, cnt + 1, k + 1, rem - 1, buf) + tuple(cur[n] for n in names)
+
+    init = (jnp.int32(0), jnp.int32(0), jnp.int32(0), jnp.int32(0),
+            jnp.zeros((out_len_max,), dt),
+            *[jnp.zeros((), f.dtype) for f in spec.fields])
+    s = lax.while_loop(cond, body, init)
+    return s[4]
+
+
+def group_serial_chunk(spec: TwoPhaseSpec, comp: jnp.ndarray, out_len_dyn,
+                       out_len_max: int, width: int) -> jnp.ndarray:
+    """Paper-faithful sequential reference: serial across groups, vector-
+    parallel within each (the warp's collaborative write, §II-B)."""
+    dt = DEV_DTYPE[width]
+    W = spec.max_group_len
+    names = [f.name for f in spec.fields]
+    lanes = jnp.arange(W, dtype=jnp.int32)
+
+    def cond(s):
+        return s[1] < out_len_dyn
+
+    def body(s):
+        pos, cnt, buf = s
+        p = spec.parse(comp, pos, width)
+        fields = {n: p[n] for n in names}     # scalars broadcast over lanes
+        vals = spec.express(comp, fields, lanes, width).astype(dt)
+        cur = lax.dynamic_slice(buf, (cnt,), (W,))
+        new = jnp.where(lanes < p["length"], vals, cur)
+        buf = lax.dynamic_update_slice(buf, new, (cnt,))
+        return pos + p["advance"], cnt + p["length"], buf
+
+    buf0 = jnp.zeros((out_len_max + W,), dt)
+    _, _, buf = lax.while_loop(cond, body, (jnp.int32(0), jnp.int32(0), buf0))
+    return buf[:out_len_max]
+
+
+# --------------------------------------------------------------------------
+# DecodeSpec: the backend-complete decode contract a codec registers
+# --------------------------------------------------------------------------
+
+BodyFn = Callable[..., jnp.ndarray]   # (inputs, consts, out_len, *, chunk_elems, width, bits)
+
+
+def _default_inputs(dev: Dict[str, Any]) -> Tuple[jnp.ndarray, ...]:
+    return (dev["comp"],)
+
+
+def words_inputs(dev: Dict[str, Any]) -> Tuple[jnp.ndarray, ...]:
+    """Chunk-input hook for bit codecs: the uint32 word view of each row."""
+    words = dev.get("comp_words")
+    if words is None:
+        words = words_view(dev["comp"])
+    return (words,)
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeSpec:
+    """Per-backend chunk bodies plus the device-operand layout.
+
+    Every body maps ``(inputs, consts, out_len)`` for ONE chunk to a
+    ``(chunk_elems,)`` row in ``DEV_DTYPE[width]``.  ``chunk_inputs`` pulls
+    the per-chunk operand arrays (leading dim = num_chunks) out of the
+    device pytree; ``consts`` supplies broadcast tables replicated to every
+    grid cell (Pallas kernels may not capture array constants).
+    """
+
+    body: BodyFn
+    body_scalar: Optional[BodyFn] = None      # §V-E driver; falls back to body
+    body_oracle: Optional[BodyFn] = None      # sequential ref; falls back to body
+    chunk_inputs: Callable[[Dict[str, Any]], Tuple[jnp.ndarray, ...]] = _default_inputs
+    consts: Callable[[], Tuple[jnp.ndarray, ...]] = tuple
+    # optional hand-tuned pallas kernel (e.g. bitpack's output-tiled one);
+    # everything else rides the generic chunk-per-grid-cell wrapper.
+    pallas_override: Optional[Callable[..., jnp.ndarray]] = None
+
+    @classmethod
+    def from_two_phase(cls, spec: TwoPhaseSpec,
+                       oracle: Optional[Callable[..., jnp.ndarray]] = None,
+                       ) -> "DecodeSpec":
+        """All four backends from a parse + express pair.
+
+        ``oracle`` optionally swaps in a handwritten sequential reference
+        (signature ``(comp, out_len_dyn, out_len_max, width)``); by default
+        the generic group-serial driver is used.
+        """
+        def body(inputs, consts, out_len, *, chunk_elems, width, bits):
+            return two_phase_chunk(spec, inputs[0], out_len, chunk_elems, width)
+
+        def body_scalar(inputs, consts, out_len, *, chunk_elems, width, bits):
+            return scalar_chunk(spec, inputs[0], out_len, chunk_elems, width)
+
+        def body_oracle(inputs, consts, out_len, *, chunk_elems, width, bits):
+            fn = oracle or functools.partial(group_serial_chunk, spec)
+            return fn(inputs[0], out_len, chunk_elems, width)
+
+        return cls(body=body, body_scalar=body_scalar, body_oracle=body_oracle)
+
+
+def run(spec: DecodeSpec, dev: Dict[str, Any], *, width: int,
+        chunk_elems: int, backend: str, interpret: bool,
+        bits: int) -> jnp.ndarray:
+    """Decode every chunk of a device table through one DecodeSpec backend."""
+    inputs = spec.chunk_inputs(dev)
+    consts = tuple(spec.consts())
+    out_lens = dev["out_lens"]
+    if backend == "pallas":
+        kernel = spec.pallas_override or _generic_pallas
+        return kernel(spec.body, inputs, consts, out_lens,
+                      chunk_elems=chunk_elems, width=width, bits=bits,
+                      interpret=interpret)
+    body = {"xla": spec.body,
+            "scalar": spec.body_scalar or spec.body,
+            "oracle": spec.body_oracle or spec.body}[backend]
+    n_in = len(inputs)
+
+    def one(*rows):
+        return body(rows[:n_in], consts, rows[n_in],
+                    chunk_elems=chunk_elems, width=width, bits=bits)
+
+    return jax.vmap(one)(*inputs, out_lens)
+
+
+def _generic_pallas(body: BodyFn, inputs, consts, out_lens, *,
+                    chunk_elems: int, width: int, bits: int,
+                    interpret: bool) -> jnp.ndarray:
+    """The single generic ``pallas_call`` wrapper: grid = chunks, one chunk
+    per cell.  Per-chunk operands tile ``(1, row)`` (the HBM->VMEM DMA of
+    chunk i+1 double-buffers against the decode of chunk i); broadcast
+    constants replicate with a constant index map."""
+    n = inputs[0].shape[0]
+    n_in = len(inputs)
+    consts2d = [jnp.asarray(c).reshape(1, -1) for c in consts]
+
+    def kernel(*refs):
+        in_refs, lens_ref = refs[:n_in], refs[n_in]
+        const_refs = refs[n_in + 1: n_in + 1 + len(consts2d)]
+        out_ref = refs[-1]
+        rows = tuple(r[0, :] for r in in_refs)
+        cs = tuple(r[0, :] for r in const_refs)
+        out_ref[0, :] = body(rows, cs, lens_ref[0, 0],
+                             chunk_elems=chunk_elems, width=width, bits=bits)
+
+    in_specs = [pl.BlockSpec((1, a.shape[1]), lambda i: (i, 0)) for a in inputs]
+    in_specs.append(pl.BlockSpec((1, 1), lambda i: (i, 0)))
+    in_specs += [pl.BlockSpec((1, c.shape[1]), lambda i: (0, 0))
+                 for c in consts2d]
+    return pl.pallas_call(
+        kernel,
+        grid=(n,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, chunk_elems), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, chunk_elems), DEV_DTYPE[width]),
+        interpret=interpret,
+    )(*inputs, out_lens.reshape(-1, 1), *consts2d)

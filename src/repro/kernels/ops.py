@@ -1,15 +1,18 @@
 """jit'd dispatch layer over the decompression kernels.
 
 Backends:
-  "xla"    — the two-phase decode bodies vmapped across chunks and compiled
+  "xla"    — the per-codec chunk bodies vmapped across chunks and compiled
              by XLA (used on CPU and as the production non-Pallas path).
   "pallas" — pl.pallas_call kernels (interpret=True on CPU for validation,
              interpret=False on real TPU).
-  "oracle" — the sequential stream-based reference decoders (kernels/ref.py).
+  "oracle" — the sequential stream-based reference decoders.
   "scalar" — the single-thread-decoding §V-E ablation baselines.
 
-All entry points take the device pytree from ``CompressedBlob.to_device()``
-plus the blob's static metadata, and return (num_chunks, chunk_elems).
+Dispatch is pure registry lookup: ``registry.get(codec).decode`` is a
+``kernels.harness.DecodeSpec`` carrying all four backend bodies, so this
+module names no codec.  All entry points take the device pytree from
+``CompressedBlob.to_device()`` plus the blob's static metadata, and return
+(num_chunks, chunk_elems) in the codec's device dtype.
 """
 from __future__ import annotations
 
@@ -22,77 +25,42 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import format as fmt
-from repro.kernels import bitpack, ref, rle_v1, rle_v2, tdeflate
+from repro.core import registry
+from repro.kernels import harness
+from repro.kernels.harness import words_view  # noqa: F401  (public alias)
 
 BACKENDS = ("xla", "pallas", "oracle", "scalar")
 
 
-def words_view(comp: jnp.ndarray) -> jnp.ndarray:
-    """(n, C) uint8 -> (n, C//4) uint32 little-endian word view."""
-    n, c = comp.shape
-    b = comp.reshape(n, c // 4, 4).astype(jnp.uint32)
-    return (b[..., 0] | (b[..., 1] << 8) | (b[..., 2] << 16) | (b[..., 3] << 24))
-
-
 @functools.partial(jax.jit, static_argnames=("codec", "width", "chunk_elems",
                                              "backend", "interpret", "bits"))
+def _decode_impl(dev: Dict[str, Any], *, codec: str, width: int,
+                 chunk_elems: int, backend: str, interpret: bool,
+                 bits: int) -> jax.Array:
+    return harness.run(registry.get(codec).decode, dev, width=width,
+                       chunk_elems=chunk_elems, backend=backend,
+                       interpret=interpret, bits=bits)
+
+
+# Dispatch observers (``count_dispatches``).  A plain list-of-lists instead
+# of rebinding the module attribute: nested/overlapping contexts each get
+# every dispatch, and exiting one never clobbers another.
+_observers: list = []
+
+
 def decode(dev: Dict[str, Any], *, codec: str, width: int, chunk_elems: int,
            backend: str = "xla", interpret: bool = True,
-           bits: int = 0) -> jnp.ndarray:
+           bits: int = 0) -> jax.Array:
     """Decode every chunk. Returns (num_chunks, chunk_elems) device array."""
-    comp = dev["comp"]
-    out_lens = dev["out_lens"]
-
-    if codec == fmt.RLE_V1:
-        if backend == "pallas":
-            return rle_v1.decode_pallas(comp, out_lens, width=width,
-                                        chunk_elems=chunk_elems,
-                                        interpret=interpret)
-        body = {"xla": rle_v1.decode_chunk,
-                "scalar": rle_v1.decode_chunk_scalar,
-                "oracle": ref.decode_rle_v1_impl}[backend]
-        return jax.vmap(lambda c, n: body(c, n, chunk_elems, width))(comp, out_lens)
-
-    if codec == fmt.RLE_V2:
-        if backend == "pallas":
-            return rle_v2.decode_pallas(comp, out_lens, width=width,
-                                        chunk_elems=chunk_elems,
-                                        interpret=interpret)
-        body = {"xla": rle_v2.decode_chunk,
-                "scalar": rle_v2.decode_chunk_scalar,
-                "oracle": ref.decode_rle_v2_impl}[backend]
-        return jax.vmap(lambda c, n: body(c, n, chunk_elems, width))(comp, out_lens)
-
-    if codec == fmt.TDEFLATE:
-        words = dev.get("comp_words")
-        if words is None:
-            words = words_view(comp)
-        luts = tuple(dev[k].astype(jnp.int32) for k in
-                     ("lut_lsym", "lut_lbits", "lut_dsym", "lut_dbits"))
-        if backend == "pallas":
-            return tdeflate.decode_pallas(words, luts, out_lens,
-                                          chunk_bytes=chunk_elems,
-                                          interpret=interpret)
-        body = {"xla": tdeflate.decode_chunk,
-                "scalar": tdeflate.decode_chunk_scalar,
-                "oracle": ref.decode_tdeflate_impl}[backend]
-        return jax.vmap(
-            lambda w_, a, b, c, d, n: body(w_, a, b, c, d, n, chunk_elems)
-        )(words, *luts, out_lens)
-
-    if codec == fmt.BITPACK:
-        words = dev.get("comp_words")
-        if words is None:
-            words = words_view(comp)
-        if backend == "pallas":
-            return bitpack.unpack_pallas(words, bits=bits,
-                                         out_elems=chunk_elems,
-                                         interpret=interpret)
-        return jax.vmap(
-            lambda w_: bitpack.unpack_tile(w_, jnp.int32(0), chunk_elems, bits)
-        )(words)
-
-    raise ValueError(f"unknown codec {codec}")
+    if _observers:
+        rec = {"num_chunks": int(dev["comp"].shape[0]), "codec": codec,
+               "width": width, "chunk_elems": chunk_elems, "backend": backend,
+               "interpret": interpret, "bits": bits}
+        for calls in _observers:
+            calls.append(dict(rec))
+    return _decode_impl(dev, codec=codec, width=width,
+                        chunk_elems=chunk_elems, backend=backend,
+                        interpret=interpret, bits=bits)
 
 
 @contextlib.contextmanager
@@ -100,38 +68,26 @@ def count_dispatches():
     """Observe python-level ``decode`` dispatches (= kernel launches issued).
 
     Yields a list that grows one entry per call, with the static decode
-    kwargs plus the table's chunk count.  Every caller (engine, batch
-    scheduler, tests, benchmarks) resolves ``ops.decode`` through the module
-    attribute at call time, so rebinding it here observes them all.
+    kwargs plus the table's chunk count.  Reentrant: contexts may nest or
+    overlap arbitrarily — each active context records every dispatch issued
+    while it is open, and closing one leaves the others intact.
     """
     calls: list = []
-    orig = decode
-
-    def counting(dev, **kw):
-        calls.append({"num_chunks": int(dev["comp"].shape[0]), **kw})
-        return orig(dev, **kw)
-
-    globals()["decode"] = counting
+    _observers.append(calls)
     try:
         yield calls
     finally:
-        globals()["decode"] = orig
+        # remove by identity: two open contexts may hold equal-valued lists
+        for i, obs in enumerate(_observers):
+            if obs is calls:
+                del _observers[i]
+                break
 
 
 def table_inputs(table: fmt.CompressedBlob):
-    """(device pytree, static bitpack bits) for a blob / merged chunk table."""
+    """(device pytree, static decode bits) for a blob / merged chunk table."""
     dev = {k: jnp.asarray(v) for k, v in table.to_device().items()}
-    bits = (int(table.extras["bitpack_bits"][0])
-            if table.codec == fmt.BITPACK else 0)
-    return dev, bits
-
-
-def cast_table_output(table: fmt.CompressedBlob, out) -> np.ndarray:
-    """Bring a decode result to host in the table's element dtype."""
-    out = np.asarray(out)
-    if table.codec == fmt.BITPACK:
-        out = out.astype({1: np.uint8, 2: np.uint16, 4: np.uint32}[table.width])
-    return out
+    return dev, registry.get(table.codec).static_bits(table)
 
 
 def decode_table(table: fmt.CompressedBlob, backend: str = "xla",
@@ -148,7 +104,7 @@ def decode_table(table: fmt.CompressedBlob, backend: str = "xla",
     out = decode(dev, codec=table.codec, width=table.width,
                  chunk_elems=table.chunk_elems, backend=backend,
                  interpret=interpret, bits=bits)
-    return cast_table_output(table, out)
+    return np.asarray(out)
 
 
 def decode_blob(blob: fmt.CompressedBlob, backend: str = "xla",

@@ -21,8 +21,7 @@ from jax import lax
 
 from repro.core import streams as st
 from repro.core import encoders as enc
-
-DEV_DTYPE = {1: jnp.uint8, 2: jnp.uint16, 4: jnp.uint32}
+from repro.kernels.harness import DEV_DTYPE  # noqa: F401  (shared dtype map)
 
 # deflate tables as jnp constants
 LEN_EXTRA = jnp.asarray(enc.LEN_EXTRA)
@@ -44,16 +43,6 @@ def _write_values(s: st.OutStream, vals: jnp.ndarray, length,
     new = jnp.where(idx < length, vals.astype(s.buf.dtype), cur)
     return s._replace(buf=lax.dynamic_update_slice(s.buf, new, (s.pos,)),
                       pos=s.pos + length.astype(jnp.int32))
-
-
-def _gather_values(comp: jnp.ndarray, byte_offs: jnp.ndarray,
-                   width: int) -> jnp.ndarray:
-    """Vector-assemble little-endian fixed-width values at byte offsets."""
-    v = jnp.take(comp, byte_offs, mode="clip").astype(jnp.uint32)
-    for i in range(1, width):
-        v = v | (jnp.take(comp, byte_offs + i, mode="clip").astype(jnp.uint32)
-                 << jnp.uint32(8 * i))
-    return v
 
 
 # --------------------------------------------------------------------------
@@ -80,7 +69,7 @@ def decode_rle_v1_impl(comp: jnp.ndarray, out_len_dyn, out_len_max: int,
         lit_len = 256 - c
         val = st.read_value_at(comp, pos + 1, width)
         s_run = st.write_run(s, val, run_len, jnp.uint32(0), RLE1_MAX_WIN)
-        lit_vals = _gather_values(comp, pos + 1 + lit_idx * width, width)
+        lit_vals = st.gather_values(comp, pos + 1 + lit_idx * width, width)
         s_lit = _write_values(s, jnp.pad(lit_vals, (0, RLE1_MAX_WIN - 128)),
                               lit_len, RLE1_MAX_WIN)
         s = jax.tree.map(lambda a, b: jnp.where(is_run, a, b), s_run, s_lit)
@@ -130,7 +119,7 @@ def decode_rle_v2_impl(comp: jnp.ndarray, out_len_dyn, out_len_max: int,
                           jnp.uint32(0))
         # run/delta/long-run all expand as init + delta*k (delta==0 for runs)
         s_run = st.write_run(s, base, length, delta, RLE2_LONG_WIN)
-        lit_vals = _gather_values(comp, pos + 1 + lit_idx * width, width)
+        lit_vals = st.gather_values(comp, pos + 1 + lit_idx * width, width)
         s_lit = _write_values(
             s, jnp.pad(lit_vals, (0, RLE2_LONG_WIN - RLE2_LIT_WIN)),
             length, RLE2_LONG_WIN)

@@ -1,37 +1,27 @@
-"""RLE v1 decode — Pallas TPU kernel (chunk-per-grid-cell, two-phase).
+"""RLE v1 codec plugin (byte-aligned runs + literals; ORC RLE v1 structure).
 
-CODAG mapping (DESIGN.md §2):
-  * grid = chunks                -> warp-level provisioning: every chunk is an
-    independent decompression stream; Pallas double-buffers the HBM->VMEM DMA
-    of chunk i+1 against the decode of chunk i (the scheduler-level latency
-    hiding the paper obtains from many resident warps).
-  * Phase 1 (group parse)        -> the irreducibly-sequential leader loop,
-    one `lax.while_loop` step per *group* (not per element): control byte ->
-    (start, kind, value, literal offset) appended to a VMEM group table.
-  * Phase 2 (expansion)          -> the all-thread decode: every VPU lane
-    independently computes its element from (init, delta, lane) — the
-    vectorized `write_run` of Table II — via a scatter/cumsum group-id map
-    and table gathers.  No synchronization, no broadcasts.
+Everything below is exactly what the paper's §IV-A framework claim says a
+codec author writes: a Phase-1 header parse and a Phase-2 value expression.
+The while-loop group-table scaffolding, the scatter/cumsum/gather all-thread
+expansion, the §V-E single-thread ablation, and the Pallas chunk-per-cell
+wrapper all live in ``kernels/harness.py``; the host encoder is
+``encoders.compress_rle_v1``; the sequential oracle stays in
+``kernels/ref.py``.
 
-VMEM budget: a 128 KiB uncompressed chunk (32Ki u32 elems) uses
-  comp (<=128K) + out (128K) + 4 group tables (2*out_len ints = 512K)
-  ~= 1 MiB << VMEM.  BlockSpecs below tile exactly one chunk per cell.
-
-Validated in interpret mode against the sequential oracle (kernels/ref.py);
-scalar single-thread variant (`decode_chunk_scalar`) implements the paper's
-§V-E ablation baseline.
+Group structure (DESIGN.md §2):
+  control c in [0,127]   -> run of length c+3 (3..130), one value follows
+  control c in [128,255] -> 256-c literals (1..128), values follow
 """
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
-from jax import lax
-from jax.experimental import pallas as pl
+import numpy as np
 
+from repro.core import encoders as enc
+from repro.core import format as fmt
+from repro.core import registry
 from repro.core import streams as st
-from repro.kernels.ref import DEV_DTYPE
+from repro.kernels import harness, ref
 
 
 def max_groups(out_len: int) -> int:
@@ -39,125 +29,58 @@ def max_groups(out_len: int) -> int:
     return out_len // 2 + 4
 
 
-# --------------------------------------------------------------------------
-# shared two-phase chunk decode body (used by the XLA backend and the kernel)
-# --------------------------------------------------------------------------
+def _parse(comp, pos, width: int):
+    """Control byte -> (length, advance, kind, value, literal offset)."""
+    c = st.read_byte_at(comp, pos)
+    is_run = c < 128
+    length = jnp.where(is_run, c + 3, 256 - c)
+    return {
+        "length": length,
+        "advance": 1 + jnp.where(is_run, width, length * width),
+        "is_run": is_run,
+        "value": st.read_value_at(comp, pos + 1, width),
+        "litoff": pos + 1,
+    }
 
 
-def decode_chunk(comp: jnp.ndarray, out_len_dyn, out_len_max: int,
-                 width: int) -> jnp.ndarray:
-    """Decode one chunk. comp uint8 (padded), returns (out_len_max,)."""
-    MG = max_groups(out_len_max)
-    dt = DEV_DTYPE[width]
-
-    # ---- Phase 1: sequential group parse ---------------------------------
-    def cond(s):
-        pos, g, cnt = s[0], s[1], s[2]
-        return jnp.logical_and(cnt < out_len_dyn, g < MG)
-
-    def body(s):
-        pos, g, cnt, starts, isrun, vals, litoff = s
-        c = st.read_byte_at(comp, pos)
-        is_run = c < 128
-        length = jnp.where(is_run, c + 3, 256 - c)
-        v = st.read_value_at(comp, pos + 1, width)
-        starts = starts.at[g].set(cnt)
-        isrun = isrun.at[g].set(is_run)
-        vals = vals.at[g].set(v)
-        litoff = litoff.at[g].set(pos + 1)
-        pos = pos + 1 + jnp.where(is_run, width, length * width)
-        return pos, g + 1, cnt + length, starts, isrun, vals, litoff
-
-    init = (jnp.int32(0), jnp.int32(0), jnp.int32(0),
-            jnp.full((MG,), out_len_max, jnp.int32),   # sentinel = out_len_max
-            jnp.zeros((MG,), jnp.bool_),
-            jnp.zeros((MG,), jnp.uint32),
-            jnp.zeros((MG,), jnp.int32))
-    _, _, _, starts, isrun, vals, litoff = lax.while_loop(cond, body, init)
-
-    # ---- Phase 2: all-lane expansion -------------------------------------
-    # group-id map: scatter a 1 at every group start, prefix-sum.
-    marker = jnp.zeros((out_len_max + 1,), jnp.int32).at[starts].add(1)
-    grp = jnp.cumsum(marker[:out_len_max]) - 1
-    idx = jnp.arange(out_len_max, dtype=jnp.int32)
-    g_start = jnp.take(starts, grp, mode="clip")
-    k = idx - g_start
-    run_v = jnp.take(vals, grp, mode="clip")
-    lit_base = jnp.take(litoff, grp, mode="clip") + k * width
-    lit_v = jnp.take(comp, lit_base, mode="clip").astype(jnp.uint32)
-    for i in range(1, width):
-        lit_v = lit_v | (jnp.take(comp, lit_base + i, mode="clip")
-                         .astype(jnp.uint32) << jnp.uint32(8 * i))
-    out = jnp.where(jnp.take(isrun, grp, mode="clip"), run_v, lit_v)
-    out = jnp.where(idx < out_len_dyn, out, 0)
-    return out.astype(dt)
+def _express(comp, f, k, width: int):
+    """Element k of a group: the run value, or the k-th gathered literal."""
+    lit = st.gather_values(comp, f["litoff"] + k * width, width)
+    return jnp.where(f["is_run"], f["value"], lit)
 
 
-# --------------------------------------------------------------------------
-# §V-E ablation: single-thread decoding (one element per loop step)
-# --------------------------------------------------------------------------
+SPEC = harness.TwoPhaseSpec(
+    fields=(harness.Field("is_run", jnp.bool_),
+            harness.Field("value", jnp.uint32),
+            harness.Field("litoff", jnp.int32)),
+    parse=_parse,
+    express=_express,
+    max_groups=max_groups,
+    max_group_len=ref.RLE1_MAX_WIN,
+)
 
 
-def decode_chunk_scalar(comp: jnp.ndarray, out_len_dyn, out_len_max: int,
-                        width: int) -> jnp.ndarray:
-    """Paper §V-E baseline: a single decode 'thread' emits one element per
-    step — exposes the serial latency CODAG's all-thread scheme removes."""
-    dt = DEV_DTYPE[width]
-
-    def cond(s):
-        return s[1] < out_len_dyn
-
-    def body(s):
-        pos, cnt, rem, val, lit_mode, buf = s
-        # parse a new group header when the current one is exhausted
-        need = rem == 0
-        c = st.read_byte_at(comp, pos)
-        is_run = c < 128
-        glen = jnp.where(is_run, c + 3, 256 - c)
-        rem = jnp.where(need, glen, rem)
-        lit_mode = jnp.where(need, ~is_run, lit_mode)
-        val_pos = jnp.where(need & is_run, pos + 1, 0)
-        new_val = st.read_value_at(comp, val_pos, width)
-        val = jnp.where(need & is_run, new_val, val)
-        # literal cursor: after header, comp pos points at this elem's bytes
-        pos = jnp.where(need, pos + 1 + jnp.where(is_run, width, 0), pos)
-        lit_v = st.read_value_at(comp, pos, width)
-        elem = jnp.where(lit_mode, lit_v, val)
-        buf = buf.at[cnt].set(elem.astype(dt))
-        pos = jnp.where(lit_mode, pos + width, pos)
-        return pos, cnt + 1, rem - 1, val, lit_mode, buf
-
-    init = (jnp.int32(0), jnp.int32(0), jnp.int32(0), jnp.uint32(0),
-            jnp.bool_(False), jnp.zeros((out_len_max,), dt))
-    s = lax.while_loop(cond, body, init)
-    return s[5]
+def _count_groups(row, width: int) -> int:
+    """Host-side header walk (Table V avg symbol length)."""
+    pos, groups = 0, 0
+    while pos < len(row):
+        c = int(row[pos])
+        pos += 1 + (width if c < 128 else (256 - c) * width)
+        groups += 1
+    return groups
 
 
-# --------------------------------------------------------------------------
-# Pallas kernel
-# --------------------------------------------------------------------------
+def _demo_data(n: int, rng) -> np.ndarray:
+    """Run-heavy uint32 stream (the codec's natural workload)."""
+    vals = rng.integers(0, 100, max(4, n // 50)).astype(np.uint32)
+    return np.resize(np.repeat(vals, rng.integers(1, 100, len(vals))), n)
 
 
-def _kernel(comp_ref, lens_ref, out_ref, *, width: int, out_len_max: int):
-    comp = comp_ref[0, :]
-    out_len = lens_ref[0, 0]
-    out_ref[0, :] = decode_chunk(comp, out_len, out_len_max, width)
-
-
-@functools.partial(jax.jit, static_argnames=("width", "chunk_elems", "interpret"))
-def decode_pallas(comp: jnp.ndarray, out_lens: jnp.ndarray, *, width: int,
-                  chunk_elems: int, interpret: bool = False) -> jnp.ndarray:
-    """comp: (num_chunks, C) uint8, out_lens: (num_chunks,) int32."""
-    n, c = comp.shape
-    dt = DEV_DTYPE[width]
-    return pl.pallas_call(
-        functools.partial(_kernel, width=width, out_len_max=chunk_elems),
-        grid=(n,),
-        in_specs=[
-            pl.BlockSpec((1, c), lambda i: (i, 0)),       # chunk bytes -> VMEM
-            pl.BlockSpec((1, 1), lambda i: (i, 0)),       # per-chunk length
-        ],
-        out_specs=pl.BlockSpec((1, chunk_elems), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((n, chunk_elems), dt),
-        interpret=interpret,
-    )(comp, out_lens.reshape(-1, 1))
+CODEC = registry.register(registry.Codec(
+    name=fmt.RLE_V1,
+    encode=enc.compress_rle_v1,
+    decode=harness.DecodeSpec.from_two_phase(SPEC, oracle=ref.decode_rle_v1_impl),
+    plane_decompose_64=True,
+    demo_data=_demo_data,
+    count_groups=_count_groups,
+))

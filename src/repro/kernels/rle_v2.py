@@ -1,159 +1,117 @@
-"""RLE v2 decode — Pallas TPU kernel (run / delta / literal / long-run).
+"""RLE v2 codec plugin (run / delta / literal / long-run; ORC RLE v2 spirit).
 
-Same two-phase architecture as rle_v1.py; the only change a codec author
-makes is the Phase-1 header parse and the Phase-2 value expression — this is
-the modularity the paper's framework claims (§IV-A): reading, group-table
-management, and expansion machinery are untouched.
+Same shape as ``rle_v1.py`` — the only code here is the Phase-1 header parse
+and the Phase-2 value expression (Table II ``write_run(init, len, delta)``
+for all lanes at once: out[k] = base + delta * k in wraparound uint32
+arithmetic, literals via the shared multi-byte gather).  All scaffolding
+lives in ``kernels/harness.py``; this is the modularity the paper's
+framework claims (§IV-A).
 
-Phase-2 expansion implements Table II `write_run(init, len, delta)` for all
-lanes at once: out[i] = base[g] + delta[g] * (i - start[g]) in wraparound
-uint32 arithmetic (delta == 0 for plain runs), literals gathered from the
-compressed bytes.
+Group structure: header h; mode = h >> 6, f = h & 63
+  mode 0 -> run,      len = f+3  (3..66),   value follows
+  mode 1 -> delta,    len = f+3  (3..66),   base + delta values follow
+  mode 2 -> literal,  len = f+1  (1..64),   values follow
+  mode 3 -> long run, len = (f<<8 | next)+3 (3..16386), value follows
 """
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
-from jax import lax
-from jax.experimental import pallas as pl
+import numpy as np
 
+from repro.core import encoders as enc
+from repro.core import format as fmt
+from repro.core import registry
 from repro.core import streams as st
-from repro.kernels.ref import DEV_DTYPE
+from repro.kernels import harness, ref
 
 
 def max_groups(out_len: int) -> int:
     return out_len // 2 + 4
 
 
-def decode_chunk(comp: jnp.ndarray, out_len_dyn, out_len_max: int,
-                 width: int) -> jnp.ndarray:
-    MG = max_groups(out_len_max)
-    dt = DEV_DTYPE[width]
-
-    # ---- Phase 1: sequential header parse --------------------------------
-    def cond(s):
-        return jnp.logical_and(s[2] < out_len_dyn, s[1] < MG)
-
-    def body(s):
-        pos, g, cnt, starts, kinds, bases, deltas, litoff = s
-        h = st.read_byte_at(comp, pos)
-        mode = h >> 6
-        f = h & 63
-        nxt = st.read_byte_at(comp, pos + 1)
-        is_lit = mode == 2
-        is_delta = mode == 1
-        is_long = mode == 3
-        length = jnp.where(is_lit, f + 1,
-                  jnp.where(is_long, ((f << 8) | nxt) + 3, f + 3))
-        val_off = pos + 1 + jnp.where(is_long, 1, 0)
-        base = st.read_value_at(comp, val_off, width)
-        delta = jnp.where(is_delta,
-                          st.read_value_at(comp, val_off + width, width),
-                          jnp.uint32(0))
-        starts = starts.at[g].set(cnt)
-        kinds = kinds.at[g].set(is_lit)
-        bases = bases.at[g].set(base)
-        deltas = deltas.at[g].set(delta)
-        litoff = litoff.at[g].set(pos + 1)
-        adv = jnp.where(is_lit, 1 + length * width,
-               jnp.where(is_delta, 1 + 2 * width,
-                jnp.where(is_long, 2 + width, 1 + width)))
-        return (pos + adv, g + 1, cnt + length,
-                starts, kinds, bases, deltas, litoff)
-
-    init = (jnp.int32(0), jnp.int32(0), jnp.int32(0),
-            jnp.full((MG,), out_len_max, jnp.int32),
-            jnp.zeros((MG,), jnp.bool_),
-            jnp.zeros((MG,), jnp.uint32),
-            jnp.zeros((MG,), jnp.uint32),
-            jnp.zeros((MG,), jnp.int32))
-    _, _, _, starts, kinds, bases, deltas, litoff = \
-        lax.while_loop(cond, body, init)
-
-    # ---- Phase 2: all-lane write_run(init, len, delta) --------------------
-    marker = jnp.zeros((out_len_max + 1,), jnp.int32).at[starts].add(1)
-    grp = jnp.cumsum(marker[:out_len_max]) - 1
-    idx = jnp.arange(out_len_max, dtype=jnp.int32)
-    k = (idx - jnp.take(starts, grp, mode="clip")).astype(jnp.uint32)
-    run_v = (jnp.take(bases, grp, mode="clip")
-             + jnp.take(deltas, grp, mode="clip") * k)
-    lit_base = jnp.take(litoff, grp, mode="clip") + (idx - jnp.take(starts, grp, mode="clip")) * width
-    lit_v = jnp.take(comp, lit_base, mode="clip").astype(jnp.uint32)
-    for i in range(1, width):
-        lit_v = lit_v | (jnp.take(comp, lit_base + i, mode="clip")
-                         .astype(jnp.uint32) << jnp.uint32(8 * i))
-    out = jnp.where(jnp.take(kinds, grp, mode="clip"), lit_v, run_v)
-    out = jnp.where(idx < out_len_dyn, out, 0)
-    return out.astype(dt)
-
-
-def decode_chunk_scalar(comp: jnp.ndarray, out_len_dyn, out_len_max: int,
-                        width: int) -> jnp.ndarray:
-    """§V-E single-thread baseline: one element per loop step."""
-    dt = DEV_DTYPE[width]
-
-    def cond(s):
-        return s[1] < out_len_dyn
-
-    def body(s):
-        pos, cnt, rem, val, delta, lit_mode, buf = s
-        need = rem == 0
-        h = st.read_byte_at(comp, pos)
-        mode = h >> 6
-        f = h & 63
-        nxt = st.read_byte_at(comp, pos + 1)
-        is_lit = mode == 2
-        is_delta = mode == 1
-        is_long = mode == 3
-        glen = jnp.where(is_lit, f + 1,
-                jnp.where(is_long, ((f << 8) | nxt) + 3, f + 3))
-        val_off = pos + 1 + jnp.where(is_long, 1, 0)
-        nbase = st.read_value_at(comp, val_off, width)
-        ndelta = jnp.where(is_delta,
+def _parse(comp, pos, width: int):
+    h = st.read_byte_at(comp, pos)
+    mode = h >> 6
+    f = h & 63
+    nxt = st.read_byte_at(comp, pos + 1)
+    is_lit = mode == 2
+    is_delta = mode == 1
+    is_long = mode == 3
+    length = jnp.where(is_lit, f + 1,
+              jnp.where(is_long, ((f << 8) | nxt) + 3, f + 3))
+    val_off = pos + 1 + jnp.where(is_long, 1, 0)
+    return {
+        "length": length,
+        "advance": jnp.where(is_lit, 1 + length * width,
+                    jnp.where(is_delta, 1 + 2 * width,
+                     jnp.where(is_long, 2 + width, 1 + width))),
+        "is_lit": is_lit,
+        "base": st.read_value_at(comp, val_off, width),
+        "delta": jnp.where(is_delta,
                            st.read_value_at(comp, val_off + width, width),
-                           jnp.uint32(0))
-        rem = jnp.where(need, glen, rem)
-        lit_mode = jnp.where(need, is_lit, lit_mode)
-        val = jnp.where(need & ~is_lit, nbase, val)
-        delta = jnp.where(need & ~is_lit, ndelta, delta)
-        hdr_adv = jnp.where(is_lit, 1,
-                   jnp.where(is_delta, 1 + 2 * width,
-                    jnp.where(is_long, 2 + width, 1 + width)))
-        pos = jnp.where(need, pos + hdr_adv, pos)
-        lit_v = st.read_value_at(comp, pos, width)
-        elem = jnp.where(lit_mode, lit_v, val)
-        buf = buf.at[cnt].set(elem.astype(dt))
-        pos = jnp.where(lit_mode, pos + width, pos)
-        val = jnp.where(lit_mode, val, val + delta)
-        return pos, cnt + 1, rem - 1, val, delta, lit_mode, buf
-
-    init = (jnp.int32(0), jnp.int32(0), jnp.int32(0), jnp.uint32(0),
-            jnp.uint32(0), jnp.bool_(False), jnp.zeros((out_len_max,), dt))
-    s = lax.while_loop(cond, body, init)
-    return s[6]
+                           jnp.uint32(0)),
+        "litoff": pos + 1,
+    }
 
 
-def _kernel(comp_ref, lens_ref, out_ref, *, width: int, out_len_max: int):
-    comp = comp_ref[0, :]
-    out_len = lens_ref[0, 0]
-    out_ref[0, :] = decode_chunk(comp, out_len, out_len_max, width)
+def _express(comp, f, k, width: int):
+    """write_run for every lane: base + delta*k, or the k-th literal."""
+    run_v = f["base"] + f["delta"] * k.astype(jnp.uint32)
+    lit = st.gather_values(comp, f["litoff"] + k * width, width)
+    return jnp.where(f["is_lit"], lit, run_v)
 
 
-@functools.partial(jax.jit, static_argnames=("width", "chunk_elems", "interpret"))
-def decode_pallas(comp: jnp.ndarray, out_lens: jnp.ndarray, *, width: int,
-                  chunk_elems: int, interpret: bool = False) -> jnp.ndarray:
-    n, c = comp.shape
-    dt = DEV_DTYPE[width]
-    return pl.pallas_call(
-        functools.partial(_kernel, width=width, out_len_max=chunk_elems),
-        grid=(n,),
-        in_specs=[
-            pl.BlockSpec((1, c), lambda i: (i, 0)),
-            pl.BlockSpec((1, 1), lambda i: (i, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, chunk_elems), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((n, chunk_elems), dt),
-        interpret=interpret,
-    )(comp, out_lens.reshape(-1, 1))
+SPEC = harness.TwoPhaseSpec(
+    fields=(harness.Field("is_lit", jnp.bool_),
+            harness.Field("base", jnp.uint32),
+            harness.Field("delta", jnp.uint32),
+            harness.Field("litoff", jnp.int32)),
+    parse=_parse,
+    express=_express,
+    max_groups=max_groups,
+    max_group_len=ref.RLE2_LONG_WIN,
+)
+
+
+def _count_groups(row, width: int) -> int:
+    pos, groups = 0, 0
+    while pos < len(row):
+        h = int(row[pos])
+        mode, f = h >> 6, h & 63
+        if mode == 2:
+            pos += 1 + (f + 1) * width
+        elif mode == 1:
+            pos += 1 + 2 * width
+        elif mode == 3:
+            pos += 2 + width
+        else:
+            pos += 1 + width
+        groups += 1
+    return groups
+
+
+def _demo_data(n: int, rng) -> np.ndarray:
+    """Runs + arithmetic ramps (exercises run, delta, and literal modes)."""
+    parts, total = [], 0
+    while total < n:
+        if rng.random() < 0.5:
+            v = np.uint32(rng.integers(0, 1000))
+            parts.append(np.full(int(rng.integers(3, 120)), v, np.uint32))
+        else:
+            base = rng.integers(0, 1 << 20)
+            step = rng.integers(1, 64)
+            m = int(rng.integers(4, 80))
+            parts.append((base + step * np.arange(m, dtype=np.uint32))
+                         .astype(np.uint32))
+        total += len(parts[-1])
+    return np.concatenate(parts)[:n]
+
+
+CODEC = registry.register(registry.Codec(
+    name=fmt.RLE_V2,
+    encode=enc.compress_rle_v2,
+    decode=harness.DecodeSpec.from_two_phase(SPEC, oracle=ref.decode_rle_v2_impl),
+    plane_decompose_64=True,
+    demo_data=_demo_data,
+    count_groups=_count_groups,
+))

@@ -13,20 +13,25 @@ Deflate — the Huffman stage is irreducibly serial):
       primitives — `write_from` for literal runs and the overlap-safe
       `memcpy` (Alg. 2, circular window when len > dist) for LZ matches.
 
-Chunk-level parallelism comes from the Pallas grid (one chunk per cell),
-exactly CODAG's warp-per-chunk provisioning.
+Chunk-level parallelism comes from the harness's generic chunk-per-grid-cell
+``pallas_call`` wrapper, exactly CODAG's warp-per-chunk provisioning.  The
+Phase-2 command execution here is serial-with-vector-writes (LZ copies
+depend on earlier output), so this codec plugs its own chunk bodies into the
+``DecodeSpec`` interface instead of a ``TwoPhaseSpec``; the deflate
+base/extra tables ride the wrapper's broadcast-constant lane.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
-from jax.experimental import pallas as pl
 
 from repro.core import encoders as enc
+from repro.core import format as fmt
+from repro.core import registry
 from repro.core import streams as st
+from repro.kernels import harness, ref
 
 LEN_EXTRA = jnp.asarray(enc.LEN_EXTRA)
 LEN_BASE = jnp.asarray(enc.LEN_BASE)
@@ -197,41 +202,56 @@ def decode_chunk_scalar(words, lut_lsym, lut_lbits, lut_dsym, lut_dbits,
     return s[5][:out_len_max]
 
 
-def _kernel(words_ref, ls_ref, lb_ref, ds_ref, db_ref, lens_ref,
-            le_ref, lbase_ref, de_ref, dbase_ref, out_ref,
-            *, out_len_max: int):
-    tables = (le_ref[0, :], lbase_ref[0, :], de_ref[0, :], dbase_ref[0, :])
-    out_ref[0, :] = decode_chunk(
-        words_ref[0, :], ls_ref[0, :], lb_ref[0, :], ds_ref[0, :],
-        db_ref[0, :], lens_ref[0, 0], out_len_max, tables=tables)
+# --------------------------------------------------------------------------
+# registry plumbing: device operands + the DecodeSpec bodies
+# --------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("chunk_bytes", "interpret"))
-def decode_pallas(words: jnp.ndarray, luts: tuple, out_lens: jnp.ndarray, *,
-                  chunk_bytes: int, interpret: bool = False) -> jnp.ndarray:
-    """words: (num_chunks, W) uint32; luts: 4x (num_chunks, 4096) int32."""
-    n, w = words.shape
-    ls, lb, ds, db = luts
-    L = ls.shape[1]
-    bcast = lambda i: (0, 0)  # shared deflate tables, replicated to each cell
-    tbls = [jnp.asarray(t, jnp.int32).reshape(1, -1)
-            for t in (enc.LEN_EXTRA, enc.LEN_BASE, enc.DIST_EXTRA, enc.DIST_BASE)]
-    return pl.pallas_call(
-        functools.partial(_kernel, out_len_max=chunk_bytes),
-        grid=(n,),
-        in_specs=[
-            pl.BlockSpec((1, w), lambda i: (i, 0)),
-            pl.BlockSpec((1, L), lambda i: (i, 0)),
-            pl.BlockSpec((1, L), lambda i: (i, 0)),
-            pl.BlockSpec((1, L), lambda i: (i, 0)),
-            pl.BlockSpec((1, L), lambda i: (i, 0)),
-            pl.BlockSpec((1, 1), lambda i: (i, 0)),
-            pl.BlockSpec((1, 29), bcast),
-            pl.BlockSpec((1, 29), bcast),
-            pl.BlockSpec((1, 30), bcast),
-            pl.BlockSpec((1, 30), bcast),
-        ],
-        out_specs=pl.BlockSpec((1, chunk_bytes), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((n, chunk_bytes), jnp.uint8),
-        interpret=interpret,
-    )(words, ls, lb, ds, db, out_lens.reshape(-1, 1), *tbls)
+def _chunk_inputs(dev):
+    """Per-chunk operands: the word stream plus the four per-chunk LUTs."""
+    words = dev.get("comp_words")
+    if words is None:
+        words = harness.words_view(dev["comp"])
+    return (words,) + tuple(dev[k].astype(jnp.int32) for k in
+                            ("lut_lsym", "lut_lbits", "lut_dsym", "lut_dbits"))
+
+
+def _body(inputs, consts, out_len, *, chunk_elems, width, bits):
+    words, ls, lb, ds, db = inputs
+    return decode_chunk(words, ls, lb, ds, db, out_len, chunk_elems,
+                        tables=consts or None)
+
+
+def _body_scalar(inputs, consts, out_len, *, chunk_elems, width, bits):
+    words, ls, lb, ds, db = inputs
+    return decode_chunk_scalar(words, ls, lb, ds, db, out_len, chunk_elems)
+
+
+def _body_oracle(inputs, consts, out_len, *, chunk_elems, width, bits):
+    words, ls, lb, ds, db = inputs
+    return ref.decode_tdeflate_impl(words, ls, lb, ds, db, out_len, chunk_elems)
+
+
+def _demo_data(n, rng):
+    """Repetitive text bytes (LZ matches + skewed literal frequencies)."""
+    motifs = [b"the quick brown fox ", b"abcabcabc", b"codag streams "]
+    out = bytearray()
+    while len(out) < n:
+        out += motifs[int(rng.integers(0, len(motifs)))]
+    return np.frombuffer(bytes(out[:n]), np.uint8).copy()
+
+
+CODEC = registry.register(registry.Codec(
+    name=fmt.TDEFLATE,
+    encode=enc.compress_tdeflate,
+    decode=harness.DecodeSpec(
+        body=_body,
+        body_scalar=_body_scalar,
+        body_oracle=_body_oracle,
+        chunk_inputs=_chunk_inputs,
+        consts=lambda: (LEN_EXTRA, LEN_BASE, DIST_EXTRA, DIST_BASE),
+    ),
+    needs_words=True,
+    byte_stream=True,
+    demo_data=_demo_data,
+))

@@ -8,7 +8,7 @@ dry-run lowers with `.lower().compile()` and train.py runs with real arrays.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -8,9 +8,6 @@ chunks; see EXPERIMENTS.md §Perf for the block-skip optimization history.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 import numpy as np

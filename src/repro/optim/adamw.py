@@ -10,7 +10,7 @@ axis is applied by the launch layer via `sharding.zero1_specs`.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, NamedTuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -22,7 +22,6 @@ DiLoCo-style outer sync (distributed/diloco.py) composes (2) across the
 """
 from __future__ import annotations
 
-import functools
 from typing import Tuple
 
 import jax

@@ -8,7 +8,7 @@ group, verified by monkeypatching ``ops.decode``.
 import numpy as np
 import pytest
 
-from repro.core import api, batch, encoders as enc, format as fmt
+from repro.core import api, batch, encoders as enc, format as fmt, registry
 from repro.core.engine import CodagEngine, EngineConfig
 from repro.kernels import ops
 
@@ -21,8 +21,8 @@ def _runs_u32(n):
 
 
 def mixed_arrays():
-    """>= 8 arrays spanning all four codecs and three widths."""
-    return [
+    """>= 8 arrays spanning EVERY registered codec and three widths."""
+    items = [
         (_runs_u32(900), fmt.RLE_V1),
         (RNG.integers(0, 250, 400).astype(np.uint8), fmt.RLE_V1),
         (_runs_u32(700), fmt.RLE_V2),
@@ -35,6 +35,12 @@ def mixed_arrays():
         (RNG.integers(0, 2 ** 7, 1200).astype(np.uint32), fmt.BITPACK),
         (RNG.integers(0, 2 ** 7, 600).astype(np.uint32), fmt.BITPACK),
     ]
+    # every registered codec rides the batch path (dbp + future plugins)
+    covered = {c for _, c in items}
+    for name in registry.names():
+        if name not in covered:
+            items.append((registry.get(name).demo_data(800, RNG), name))
+    return items
 
 
 @pytest.fixture
@@ -152,6 +158,26 @@ def test_batched_engine_config_respected(counted):
     for arr, out in zip(arrays, outs):
         assert np.array_equal(out, arr)
     assert len(counted) == 1  # block unit still traces one decode
+
+
+def test_mixed_arrays_cover_registry():
+    """The batch matrix spans the full registry (completeness guard)."""
+    assert {c for _, c in mixed_arrays()} == set(registry.names())
+
+
+def test_dbp_batched_single_dispatch_group(counted):
+    """ISSUE-2 acceptance: several dbp blobs fuse into ONE dispatch group
+    through ``api.decompress_many``, bit-exactly."""
+    arrays = [np.cumsum(RNG.integers(0, 9, 700 + 37 * i)).astype(np.uint32)
+              for i in range(4)]
+    cas = api.compress_many(arrays, fmt.DBP, chunk_bytes=512)
+    outs = api.decompress_many(cas)
+    for arr, out in zip(arrays, outs):
+        assert np.array_equal(out, arr)
+    assert len(counted) == 1
+    assert counted[0]["codec"] == fmt.DBP
+    assert counted[0]["num_chunks"] == sum(
+        b.num_chunks for ca in cas for b in ca.blobs)
 
 
 def test_tdeflate_per_chunk_luts_travel_with_merge():

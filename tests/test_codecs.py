@@ -1,17 +1,22 @@
-"""Codec roundtrips: every codec x backend x dtype.
+"""Codec roundtrips: every REGISTERED codec x backend x dtype.
+
+The codec matrix is pulled from ``repro.core.registry`` so a new plugin
+(e.g. ``dbp``) is covered automatically — including empty chunks,
+single-element chunks, and all supported widths.
 
 Hypothesis property tests live in test_codecs_properties.py (guarded with
 ``pytest.importorskip`` so the deterministic suite here never depends on
 hypothesis being installed).
 """
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import api, encoders as enc, format as fmt
+from repro.core import api, encoders as enc, format as fmt, registry
 from repro.core.engine import CodagEngine, EngineConfig
 
 RNG = np.random.default_rng(7)
+
+ALL_CODECS = registry.names()
 
 
 def datasets():
@@ -28,6 +33,11 @@ def datasets():
                               RNG.integers(1, 60, 30)),
         "text": np.frombuffer(b"the quick brown fox " * 40
                               + b"abcabcabc" * 25, np.uint8).copy(),
+        # registry-mandated edge cases
+        "empty_u32": np.zeros(0, np.uint32),
+        "single_u8": np.asarray([200], np.uint8),
+        "single_u16": np.asarray([40000], np.uint16),
+        "single_u32": np.asarray([2 ** 31 + 7], np.uint32),
     }
 
 
@@ -45,7 +55,7 @@ ENGINES = {
 _FAST_ENGINES = ("warp_xla", "oracle")
 
 
-@pytest.mark.parametrize("codec", [fmt.RLE_V1, fmt.RLE_V2, fmt.TDEFLATE])
+@pytest.mark.parametrize("codec", ALL_CODECS)
 @pytest.mark.parametrize("engine_name", [
     e if e in _FAST_ENGINES else pytest.param(e, marks=pytest.mark.slow)
     for e in ENGINES])
@@ -54,7 +64,24 @@ def test_roundtrip_all_backends(codec, engine_name):
     for name, arr in datasets().items():
         ca = api.compress(arr, codec, chunk_bytes=600)
         got = api.decompress(ca, eng)
+        assert got.dtype == arr.dtype and got.shape == arr.shape, \
+            f"{codec}/{engine_name}/{name}"
         assert np.array_equal(got, arr), f"{codec}/{engine_name}/{name}"
+
+
+@pytest.mark.parametrize("codec", ALL_CODECS)
+@pytest.mark.parametrize("width_dtype", [np.uint8, np.uint16, np.uint32])
+def test_roundtrip_all_widths(codec, width_dtype):
+    """Every registered codec round-trips each supported element width."""
+    info = np.iinfo(width_dtype)
+    arr = np.concatenate([
+        np.repeat(width_dtype(3), 70),
+        RNG.integers(0, info.max, 90, endpoint=True).astype(width_dtype),
+        (np.arange(80) % 250).astype(width_dtype)])
+    ca = api.compress(arr, codec, chunk_bytes=333)
+    got = api.decompress(ca)
+    assert got.dtype == arr.dtype
+    assert np.array_equal(got, arr)
 
 
 @pytest.mark.parametrize("backend", ["xla", "pallas"])
@@ -79,6 +106,15 @@ def test_delta_beats_rle_v1_on_arithmetic():
     r2 = api.compress(arr, fmt.RLE_V2).ratio
     # delta groups cap at 66 elems: 9B header+base+delta per 264B ~ 0.034
     assert r2 < 0.05 and r2 < r1 / 20
+
+
+def test_dbp_compresses_sorted_ids():
+    """dbp's target workload: sorted ids / timestamps (small FOR ranges)."""
+    arr = np.cumsum(RNG.integers(0, 16, 100_000)).astype(np.uint32)
+    r_dbp = api.compress(arr, fmt.DBP).ratio
+    r_rle1 = api.compress(arr, fmt.RLE_V1).ratio
+    # ~11 bits/elem of offsets + headers vs RLE v1 literal fallback (~1.0)
+    assert r_dbp < 0.5 and r_dbp < r_rle1 / 2
 
 
 def test_tdeflate_compresses_text():

@@ -2,6 +2,10 @@
 
 Split from test_codecs.py so the deterministic suite collects and runs even
 where hypothesis is not installed — here the whole module skips gracefully.
+
+The codec strategies sample from ``registry.names()`` so every registered
+plugin (including ``dbp`` and any future codec) is property-tested with no
+edits here.
 """
 import numpy as np
 import pytest
@@ -9,15 +13,17 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as hst  # noqa: E402
 
-from repro.core import api, format as fmt  # noqa: E402
+from repro.core import api, format as fmt, registry  # noqa: E402
 from repro.core.engine import CodagEngine, EngineConfig  # noqa: E402
 
 _eng = CodagEngine(EngineConfig())
 
+ALL_CODECS = registry.names()
+
 
 @settings(max_examples=25, deadline=None)
-@given(hst.lists(hst.integers(0, 255), min_size=1, max_size=2000),
-       hst.sampled_from([fmt.RLE_V1, fmt.RLE_V2, fmt.TDEFLATE]),
+@given(hst.lists(hst.integers(0, 255), min_size=0, max_size=2000),
+       hst.sampled_from(ALL_CODECS),
        hst.sampled_from([64, 333, 1024]))
 def test_roundtrip_property_u8(data, codec, chunk_bytes):
     arr = np.asarray(data, np.uint8)
@@ -29,7 +35,7 @@ def test_roundtrip_property_u8(data, codec, chunk_bytes):
 @given(hst.lists(
     hst.tuples(hst.integers(0, 2 ** 32 - 1), hst.integers(1, 40)),
     min_size=1, max_size=60),
-    hst.sampled_from([fmt.RLE_V1, fmt.RLE_V2]))
+    hst.sampled_from([c for c in ALL_CODECS if c != fmt.TDEFLATE]))
 def test_roundtrip_property_runs_u32(runs, codec):
     arr = np.concatenate([np.repeat(np.uint32(v), l) for v, l in runs])
     ca = api.compress(arr, codec, chunk_bytes=512)
@@ -38,10 +44,11 @@ def test_roundtrip_property_runs_u32(runs, codec):
 
 @settings(max_examples=20, deadline=None)
 @given(hst.integers(0, 2 ** 31), hst.integers(-500, 500),
-       hst.integers(4, 300))
-def test_roundtrip_property_arithmetic(base, delta, n):
+       hst.integers(4, 300),
+       hst.sampled_from([fmt.RLE_V2, fmt.DBP]))
+def test_roundtrip_property_arithmetic(base, delta, n, codec):
     arr = (base + delta * np.arange(n, dtype=np.int64)).astype(np.uint32)
-    ca = api.compress(arr, fmt.RLE_V2, chunk_bytes=512)
+    ca = api.compress(arr, codec, chunk_bytes=512)
     assert np.array_equal(api.decompress(ca, _eng), arr)
 
 
@@ -64,7 +71,7 @@ def test_tdeflate_property_bytes(data):
 
 @settings(max_examples=10, deadline=None)
 @given(hst.lists(
-    hst.tuples(hst.sampled_from([fmt.RLE_V1, fmt.RLE_V2, fmt.TDEFLATE]),
+    hst.tuples(hst.sampled_from(ALL_CODECS),
                hst.lists(hst.integers(0, 255), min_size=1, max_size=400)),
     min_size=0, max_size=6))
 def test_batched_matches_per_blob_property(items):

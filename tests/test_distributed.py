@@ -1,6 +1,5 @@
 """Multi-device distribution tests (8 fake CPU devices via subprocess —
 conftest deliberately keeps the main pytest process at 1 device)."""
-import json
 import os
 import subprocess
 import sys

@@ -4,7 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import encoders as enc, format as fmt
+from repro.core import encoders as enc, format as fmt, registry
 from repro.kernels import bitpack, ops, ref
 
 RNG = np.random.default_rng(3)
@@ -29,25 +29,25 @@ def _gen(kind: str, n: int, dtype):
 
 def _decode_both(blob: fmt.CompressedBlob, codec):
     dev = {k: jnp.asarray(v) for k, v in blob.to_device().items()}
-    bits = int(blob.extras["bitpack_bits"][0]) if codec == fmt.BITPACK else 0
+    bits = registry.get(codec).static_bits(blob)
     pallas_out = ops.decode(dev, codec=codec, width=blob.width,
                             chunk_elems=blob.chunk_elems, backend="pallas",
                             interpret=True, bits=bits)
     oracle_out = ops.decode(dev, codec=codec, width=blob.width,
-                            chunk_elems=blob.chunk_elems,
-                            backend="oracle" if codec != fmt.BITPACK else "xla",
+                            chunk_elems=blob.chunk_elems, backend="oracle",
                             bits=bits)
     return np.asarray(pallas_out), np.asarray(oracle_out), blob
 
 
-@pytest.mark.parametrize("codec", [fmt.RLE_V1, fmt.RLE_V2])
+@pytest.mark.parametrize("codec", [fmt.RLE_V1, fmt.RLE_V2, fmt.DBP])
 @pytest.mark.parametrize("dtype", [np.uint8, np.uint16, np.uint32])
 @pytest.mark.parametrize("kind", ["runs", "random", "delta", "mixed"])
 @pytest.mark.parametrize("n,chunk_bytes", [
     (257, 256),
     pytest.param(1024, 512, marks=pytest.mark.slow),
     pytest.param(4096, 2048, marks=pytest.mark.slow)])
-def test_rle_kernel_vs_oracle(codec, dtype, kind, n, chunk_bytes):
+def test_two_phase_kernel_vs_oracle(codec, dtype, kind, n, chunk_bytes):
+    """Two-phase harness codecs: Pallas (interpret) vs sequential oracle."""
     arr = _gen(kind, n, dtype)
     blob = enc.compress(arr, codec, chunk_bytes=chunk_bytes)
     got_pallas, got_oracle, blob = _decode_both(blob, codec)
@@ -91,7 +91,7 @@ def test_bitpack_kernel_vs_oracle(bits, n):
 
 def test_scalar_variant_matches_vectorized():
     """§V-E ablation implementations agree with the two-phase kernels."""
-    for codec in (fmt.RLE_V1, fmt.RLE_V2):
+    for codec in (fmt.RLE_V1, fmt.RLE_V2, fmt.DBP):
         arr = _gen("mixed", 2000, np.uint16)
         blob = enc.compress(arr, codec, chunk_bytes=777)
         dev = {k: jnp.asarray(v) for k, v in blob.to_device().items()}

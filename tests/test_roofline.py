@@ -1,6 +1,5 @@
 """Roofline machinery: HLO collective parser + flops model + sharding specs."""
 import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_arch

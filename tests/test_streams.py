@@ -1,7 +1,6 @@
 """Unit tests for the Table I/II stream APIs (core/streams.py)."""
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import streams as st
 
