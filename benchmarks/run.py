@@ -10,6 +10,9 @@ Prints ``name,value,derived`` CSV rows:
   roofline_report.py  -> §Roofline terms from the dry-run artifacts
   batched.py          -> launches-per-restore + throughput, batched vs
                          per-blob decode (core.batch scheduler)
+  serving.py          -> open-loop multi-tenant DecompressionService:
+                         dispatch amplification, latency percentiles,
+                         cache hit rate
 """
 from __future__ import annotations
 
@@ -24,11 +27,11 @@ def main() -> None:
                 help="per-dataset size; 0.25 keeps the full suite ~10 min on CPU")
     ap.add_argument("--only", default=None,
                     help="throughput|ablation_decode|ablation_unit|ratios|"
-                         "roofline|batched")
+                         "roofline|batched|serving")
     args = ap.parse_args()
 
     from benchmarks import (ablations, batched, ratios, roofline_report,
-                            throughput)
+                            serving, throughput)
     suites = {
         "throughput": lambda: throughput.run(args.size_mb),
         "ablation_decode": lambda: ablations.run_decode_ablation(
@@ -39,6 +42,9 @@ def main() -> None:
         "roofline": roofline_report.run,
         "batched": lambda: batched.run(
             n_arrays=12, kb_per_array=max(8, int(args.size_mb * 64))),
+        "serving": lambda: serving.run(
+            n_requests=64, n_tenants=4, n_unique=16,
+            kb_per_blob=max(8, int(args.size_mb * 32))),
     }
     if args.only:
         suites = {args.only: suites[args.only]}

@@ -4,7 +4,11 @@ Fails (exit 1) if any registered codec is missing from:
   * the fast-tier test matrix (tests/test_codecs.py parametrizes over
     ``registry.names()`` — verified here by importing its module-level
     matrix), or
-  * the bench-smoke matrices (benchmarks/batched.py, benchmarks/ablations.py).
+  * the bench-smoke matrices (benchmarks/batched.py, benchmarks/ablations.py),
+    or
+  * the golden conformance vectors (tests/vectors/<codec>.json — the
+    committed encode/decode fixtures tests/test_conformance.py runs on
+    every backend).
 
 Also validates that every codec's plugin surface is complete enough for
 those matrices to actually exercise it (encode/decode hooks + demo data).
@@ -52,6 +56,21 @@ def main() -> int:
         matrix = set(mod.codec_matrix())
         if matrix != names:
             problems.append(f"{mod.__name__} matrix {sorted(matrix)} != registry")
+
+    # golden conformance vectors: every codec must commit fixtures
+    vec_dir = _ROOT / "tests" / "vectors"
+    for name in sorted(names):
+        vec_file = vec_dir / f"{name}.json"
+        if not vec_file.exists():
+            problems.append(
+                f"{name}: no golden vectors at {vec_file} "
+                f"(run scripts/make_vectors.py and commit)")
+            continue
+        import json
+        n_vec = len(json.loads(vec_file.read_text())["vectors"])
+        if n_vec < 5:
+            problems.append(
+                f"{name}: only {n_vec} golden vectors (full matrix expected)")
 
     # plugin surface completeness + a tiny end-to-end round trip per codec
     rng = np.random.default_rng(0)

@@ -104,7 +104,8 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
 
 def restore(ckpt_dir: str, step: int, like, *, shardings=None,
             engine: Optional[CodagEngine] = None,
-            decode_window: Optional[int] = None):
+            decode_window: Optional[int] = None,
+            service=None):
     """Restore into the structure of ``like`` (a pytree of arrays or
     ShapeDtypeStructs).  ``shardings``: optional matching pytree of
     NamedShardings — the ELASTIC path: state saved on one mesh is re-laid
@@ -114,10 +115,19 @@ def restore(ckpt_dir: str, step: int, like, *, shardings=None,
     batched plan (max stream count per launch); peak host memory is then a
     few multiples of the checkpoint size.  Set a window to decode that many
     leaves per plan instead — bounded memory, proportionally more
-    dispatches."""
+    dispatches.
+
+    ``service``: a ``core.server.DecompressionService`` to decode through
+    instead of a private engine — all leaves ride the service's micro-batch
+    windows (sharing dispatches and the decoded-blob cache with any other
+    concurrent restores/requests on the same service)."""
+    if engine is not None and service is not None:
+        raise ValueError("pass engine= OR service=, not both: the service "
+                         "decodes on its own engine")
     root = Path(ckpt_dir) / f"step_{step}"
     manifest = json.loads((root / MANIFEST).read_text())
-    engine = engine or CodagEngine(EngineConfig())
+    if service is None:
+        engine = engine or CodagEngine(EngineConfig())
 
     flat_like, tdef = jax.tree_util.tree_flatten(like)
     keys = list(_flatten(like).keys())
@@ -142,7 +152,11 @@ def restore(ckpt_dir: str, step: int, like, *, shardings=None,
     w = decode_window or max(1, len(comp_cas))
     decoded: list = []
     for j in range(0, len(comp_cas), w):
-        decoded.extend(codec_api.decompress_many(comp_cas[j:j + w], engine))
+        if service is not None:
+            decoded.extend(service.decode_arrays(comp_cas[j:j + w]))
+        else:
+            decoded.extend(codec_api.decompress_many(comp_cas[j:j + w],
+                                                     engine))
     for i, arr in zip(comp_idx, decoded):
         entry = manifest["leaves"][keys[i]]
         leaves[i] = (arr.reshape(-1).view(np.dtype(entry["dtype"]))

@@ -59,11 +59,7 @@ def compress(arr: np.ndarray, codec: str,
 
 
 def _combine(ca: CompressedArray, outs: List[np.ndarray]) -> np.ndarray:
-    if len(outs) == 1:
-        return outs[0]  # reassemble() already restored dtype/shape
-    lo, hi = outs
-    u64 = lo.reshape(-1).astype(np.uint64) | (hi.reshape(-1).astype(np.uint64) << np.uint64(32))
-    return u64.view(np.dtype(ca.orig_dtype)).reshape(ca.orig_shape)
+    return fmt.combine_planes(outs, ca.orig_dtype, ca.orig_shape)
 
 
 def decompress(ca: CompressedArray,
@@ -89,12 +85,31 @@ def compress_many(arrays: Sequence[np.ndarray],
 
 
 def decompress_many(cas: Sequence[CompressedArray],
-                    engine: Optional[CodagEngine] = None) -> List[np.ndarray]:
+                    engine: Optional[CodagEngine] = None,
+                    service=None) -> List[np.ndarray]:
     """Batched decompress: every chunk of every array in one launch per
     (codec, width, chunk_elems, bits) group — the CODAG provisioning move.
 
+    With no ``engine``, the call routes through the process-wide
+    ``server.default_service()`` (or an explicit ``service=``): all blobs
+    enter ONE micro-batch window atomically — same one-dispatch-per-group
+    accounting as the direct plan, plus the service's decoded-blob cache
+    and coalescing with any other concurrently-submitted requests.  Passing
+    an ``engine`` keeps the direct synchronous ``BatchPlan`` path (exact
+    per-call dispatch control, custom engine configs).
+
     Bit-exact vs. per-array ``decompress``; outputs follow input order.
     """
+    if engine is not None and service is not None:
+        raise ValueError("pass engine= OR service=, not both: the service "
+                         "decodes on its own engine")
+    if not cas:
+        return []
+    if engine is None:
+        if service is None:
+            from repro.core import server as server_mod
+            service = server_mod.default_service()
+        return service.decode_arrays(cas)
     flat: List[fmt.CompressedBlob] = []
     spans: List[tuple] = []   # (start, count) into flat, per array
     for ca in cas:

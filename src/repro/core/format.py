@@ -176,6 +176,21 @@ def concat_blobs(blobs: list["CompressedBlob"]) -> "CompressedBlob":
     )
 
 
+def combine_planes(outs: list, orig_dtype: str, orig_shape: tuple) -> np.ndarray:
+    """Recombine decoded plane blobs into one logical array.
+
+    One blob is the common case (``reassemble`` already restored
+    dtype/shape); two blobs are the lo/hi uint32 planes of an 8-byte dtype
+    (``api.compress`` plane decomposition).
+    """
+    if len(outs) == 1:
+        return outs[0]
+    lo, hi = outs
+    u64 = (lo.reshape(-1).astype(np.uint64)
+           | (hi.reshape(-1).astype(np.uint64) << np.uint64(32)))
+    return u64.view(np.dtype(orig_dtype)).reshape(orig_shape)
+
+
 def chunk_array(arr: np.ndarray, chunk_bytes: int = DEFAULT_CHUNK_BYTES):
     """Split ``arr`` into fixed-size element chunks (last may be short)."""
     flat, width, dev_dtype = _as_bytes_view(arr)

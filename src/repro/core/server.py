@@ -1,0 +1,496 @@
+"""Async decompression service with adaptive micro-batching.
+
+The batch scheduler (``core.batch``) fuses blobs that arrive *together* in
+one call.  A serving workload does not arrive together: requests trickle in
+per-tensor from many producers, and decoding each on arrival reproduces the
+few-streams provisioning pathology of paper Fig. 1a launch by launch — every
+dispatch carries one blob's chunks instead of a saturated stream table.
+
+``DecompressionService`` closes that gap.  Producers submit blobs from any
+thread and get a ``concurrent.futures.Future`` back; a single worker thread
+coalesces everything that arrives inside an adaptive micro-batching window
+
+  * flush when the window holds ``max_batch_blobs`` blobs, or
+  * flush when ``max_delay_ms`` has elapsed since the window opened, or
+  * flush early when the queue goes idle for ``idle_ms`` (adaptive part:
+    a burst is fused whole, a lone straggler is not held hostage),
+
+builds ONE fused chunk table per ``(codec, width, chunk_elems, bits)`` group
+per window (``format.concat_blobs``), and resolves each request's future
+from the scattered rows.  Concurrent same-group requests therefore share a
+single engine dispatch — dispatch amplification < 1.0 vs. per-blob decode.
+
+In front of the dispatch path sits a decoded-blob LRU cache keyed by a
+content digest of the compressed payload (``blob_digest``) and bounded by a
+byte budget; repeated blobs (hot shards, shared embedding planes) resolve
+without touching the engine.  Identical blobs inside one window are deduped
+into a single decode as well.
+
+    svc = DecompressionService(max_batch_blobs=64, max_delay_ms=2.0)
+    fut = svc.submit(blob)           # any thread
+    out = fut.result()               # decoded ndarray, bit-exact
+    svc.stats()                      # blobs/window, dispatches/window,
+                                     # cache hit rate, p50/p99 latency
+    svc.close()                      # graceful: drains, then joins
+
+``api.decompress_many`` routes through a process-wide default service
+(``default_service()``); ``checkpoint.restore(..., service=)`` and
+``data.pipeline.CompressedLoader(service=)`` opt consumers in explicitly.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import hashlib
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import format as fmt
+from repro.core import registry
+from repro.core.engine import CodagEngine, EngineConfig
+
+_CLOSE = object()          # queue sentinel; nothing is enqueued after it
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, n - 1).bit_length() if n > 1 else 1
+
+
+def pad_table_to_bucket(table: fmt.CompressedBlob) -> fmt.CompressedBlob:
+    """Pad a merged chunk table to power-of-two row/column buckets.
+
+    Every micro-batch window fuses a different set of blobs, so the merged
+    table's ``(num_chunks, max_comp_bytes)`` shape is fresh almost every
+    window — and each fresh shape is a new XLA compile.  Padding rows with
+    zero-length chunks (``comp_lens == out_lens == 0``: every decode body
+    exits immediately, the same convention the engine's block mode relies
+    on) and columns with zero bytes buckets the jit cache by
+    ``(group key, pow2 rows, pow2 cols)``: after a handful of windows the
+    steady state is compile-free.  Padding rows sit at the END of the
+    table, so callers' row-range scatter is unaffected.
+    """
+    rows = table.num_chunks
+    cols = int(table.comp.shape[1])
+    target_rows = _next_pow2(rows)
+    target_cols = max(128, _next_pow2(cols))
+    if target_rows == rows and target_cols == cols:
+        return table
+    comp = np.zeros((target_rows, target_cols), np.uint8)
+    comp[:rows, :cols] = table.comp
+    pad = target_rows - rows
+    shared = registry.get(table.codec).shared_extras
+    extras = {}
+    for k, v in table.extras.items():
+        if k in shared or v.shape[:1] != (rows,):
+            extras[k] = v                    # group-wide scalar/table
+        else:                                # per-chunk rows: pad with zeros
+            extras[k] = np.concatenate(
+                [v, np.zeros((pad,) + v.shape[1:], v.dtype)], axis=0)
+    return dataclasses.replace(
+        table, comp=comp,
+        comp_lens=np.concatenate(
+            [table.comp_lens, np.zeros(pad, np.int32)]).astype(np.int32),
+        out_lens=np.concatenate(
+            [table.out_lens, np.zeros(pad, np.int32)]).astype(np.int32),
+        extras=extras)
+
+
+def blob_digest(blob: fmt.CompressedBlob) -> str:
+    """Content hash of a compressed blob — equal digests decode identically.
+
+    Covers everything the decode output depends on: codec + static decode
+    metadata, the dense comp matrix (padding is all-zeros by construction,
+    so it is deterministic), the length vectors, and every extras table.
+    Used as the service cache key and by the golden-vector conformance
+    suite as the committed encoder fingerprint.
+    """
+    h = hashlib.blake2b(digest_size=16)
+    h.update(f"{blob.codec}|{blob.width}|{blob.chunk_elems}|"
+             f"{blob.total_elems}|{blob.orig_dtype}|{blob.orig_shape}"
+             .encode())
+    h.update(np.ascontiguousarray(blob.comp_lens, np.int64).tobytes())
+    h.update(np.ascontiguousarray(blob.out_lens, np.int64).tobytes())
+    h.update(np.ascontiguousarray(blob.comp).tobytes())
+    for k in sorted(blob.extras):
+        v = np.ascontiguousarray(blob.extras[k])
+        h.update(f"|{k}|{v.dtype}|{v.shape}|".encode())
+        h.update(v.tobytes())
+    return h.hexdigest()
+
+
+class _LRUCache:
+    """Byte-budgeted LRU of decoded ndarrays. Not thread-safe on its own —
+    the service touches it from the worker thread under the service lock."""
+
+    def __init__(self, max_bytes: int):
+        self.max_bytes = int(max_bytes)
+        self._entries: "collections.OrderedDict[str, np.ndarray]" = \
+            collections.OrderedDict()
+        self.bytes = 0
+
+    def get(self, key: str) -> Optional[np.ndarray]:
+        arr = self._entries.get(key)
+        if arr is not None:
+            self._entries.move_to_end(key)
+        return arr
+
+    def put(self, key: str, arr: np.ndarray) -> None:
+        if arr.nbytes > self.max_bytes or key in self._entries:
+            return
+        stored = arr.copy()          # private copy: callers may mutate theirs
+        stored.flags.writeable = False
+        self._entries[key] = stored
+        self.bytes += stored.nbytes
+        while self.bytes > self.max_bytes and self._entries:
+            _, evicted = self._entries.popitem(last=False)
+            self.bytes -= evicted.nbytes
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+
+@dataclasses.dataclass
+class _Request:
+    blob: fmt.CompressedBlob
+    future: Future
+    t_submit: float
+    # content digest, precomputed on the producer thread when the cache is
+    # on (hashing parallelizes across producers; the worker stays on the
+    # dispatch path).  None when the cache is off — the worker then dedupes
+    # by blob object identity instead of content.
+    digest: Optional[str] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceStats:
+    """Cumulative snapshot; rates/percentiles derived at snapshot time."""
+
+    windows: int
+    blobs: int
+    dispatches: int
+    cache_hits: int
+    cache_misses: int
+    errors: int
+    cache_bytes: int
+    blobs_per_window: float
+    dispatches_per_window: float
+    cache_hit_rate: float
+    latency_p50_ms: float
+    latency_p99_ms: float
+
+    @property
+    def dispatch_amplification(self) -> float:
+        """Engine dispatches per submitted blob; < 1.0 means coalescing wins
+        over the one-dispatch-per-blob baseline."""
+        return self.dispatches / max(1, self.blobs)
+
+
+class DecompressionService:
+    """Micro-batching decode front-end; see module docstring.
+
+    Parameters
+    ----------
+    engine:           the CodagEngine every fused dispatch runs on.
+    max_batch_blobs:  flush the window once it holds this many blobs.  An
+                      atomic ``submit_many`` larger than this stays whole.
+    max_delay_ms:     hard latency bound — flush this long after the first
+                      blob of the window arrived even if requests keep
+                      trickling in.
+    idle_ms:          flush early once the queue has been idle this long
+                      (<= max_delay_ms).  Small values favor latency, values
+                      equal to ``max_delay_ms`` favor coalescing.
+    cache_bytes:      decoded-blob LRU budget; 0 disables the cache.
+    bucket_shapes:    pad fused tables to power-of-two buckets
+                      (``pad_table_to_bucket``) so steady-state windows hit
+                      the jit cache instead of recompiling.  Costs up to 2x
+                      zero rows per dispatch; disable for exact per-call
+                      dispatch geometry (the default service disables both
+                      this and the cache, for ``decompress_many``'s
+                      one-shot batches).
+    latency_window:   how many recent request latencies feed p50/p99.
+    """
+
+    def __init__(self, engine: Optional[CodagEngine] = None, *,
+                 max_batch_blobs: int = 64, max_delay_ms: float = 2.0,
+                 idle_ms: Optional[float] = None,
+                 cache_bytes: int = 32 << 20,
+                 bucket_shapes: bool = True,
+                 latency_window: int = 4096):
+        if max_batch_blobs < 1:
+            raise ValueError("max_batch_blobs must be >= 1")
+        self.engine = engine or CodagEngine(EngineConfig())
+        self.max_batch_blobs = int(max_batch_blobs)
+        self.max_delay_ms = float(max_delay_ms)
+        self.idle_ms = min(float(idle_ms if idle_ms is not None else 0.5),
+                           self.max_delay_ms) if max_delay_ms > 0 else 0.0
+        self.bucket_shapes = bool(bucket_shapes)
+        self._q: "queue.Queue" = queue.Queue()
+        self._lock = threading.Lock()
+        self._closed = False
+        self._cache = _LRUCache(cache_bytes) if cache_bytes > 0 else None
+        self._latencies: "collections.deque[float]" = collections.deque(
+            maxlen=latency_window)
+        self._windows = 0
+        self._blobs = 0
+        self._dispatches = 0
+        self._cache_hits = 0
+        self._cache_misses = 0
+        self._errors = 0
+        self._worker = threading.Thread(target=self._worker_loop,
+                                        name="codag-decomp-service",
+                                        daemon=True)
+        self._worker.start()
+
+    # ------------------------------------------------------------- submit
+
+    def submit(self, blob: fmt.CompressedBlob) -> Future:
+        """Enqueue one blob; returns a Future of the decoded ndarray."""
+        return self.submit_many([blob])[0]
+
+    def submit_many(self, blobs: Sequence[fmt.CompressedBlob]) -> List[Future]:
+        """Enqueue blobs ATOMICALLY: they enter the same window together
+        (a window may grow past ``max_batch_blobs`` to keep a batch whole)."""
+        if not blobs:
+            return []
+        now = time.perf_counter()
+        reqs = [_Request(b, Future(), now,
+                         blob_digest(b) if self._cache is not None else None)
+                for b in blobs]
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("DecompressionService is closed")
+            # put under the lock so close() cannot interleave its sentinel
+            # in front of us (anything after the sentinel would never drain).
+            self._q.put(reqs)
+        return [r.future for r in reqs]
+
+    def submit_array(self, ca) -> Future:
+        """Enqueue a ``api.CompressedArray``; the future resolves to the
+        recombined logical array (lo/hi planes joined for 8-byte dtypes)."""
+        futs = self.submit_many(list(ca.blobs))
+        out: Future = Future()
+        pending = [len(futs)]
+        lk = threading.Lock()
+
+        def _done(_):
+            with lk:
+                pending[0] -= 1
+                if pending[0]:
+                    return
+            try:
+                outs = [f.result() for f in futs]
+                out.set_result(fmt.combine_planes(
+                    outs, ca.orig_dtype, ca.orig_shape))
+            except BaseException as e:  # propagate any blob failure
+                out.set_exception(e)
+
+        for f in futs:
+            f.add_done_callback(_done)
+        return out
+
+    def decode(self, blob: fmt.CompressedBlob) -> np.ndarray:
+        """Blocking single-blob convenience."""
+        return self.submit(blob).result()
+
+    def decode_arrays(self, cas: Sequence) -> List[np.ndarray]:
+        """Blocking batch decode of ``CompressedArray``s.  All plane blobs of
+        all arrays enter one window atomically, so the call costs exactly one
+        dispatch per group key (same accounting as ``batch.BatchPlan``)."""
+        flat = [b for ca in cas for b in ca.blobs]
+        futs = self.submit_many(flat)
+        outs = [f.result() for f in futs]
+        result, i = [], 0
+        for ca in cas:
+            n = len(ca.blobs)
+            result.append(fmt.combine_planes(
+                outs[i:i + n], ca.orig_dtype, ca.orig_shape))
+            i += n
+        return result
+
+    # ----------------------------------------------------------- lifecycle
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    def close(self, timeout: Optional[float] = None) -> None:
+        """Graceful shutdown: refuse new submits, drain every queued request
+        (all outstanding futures resolve), then join the worker."""
+        with self._lock:
+            if self._closed:
+                already = True
+            else:
+                already = False
+                self._closed = True
+                self._q.put(_CLOSE)
+        if not already:
+            self._worker.join(timeout)
+
+    def __enter__(self) -> "DecompressionService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # --------------------------------------------------------------- stats
+
+    def stats(self) -> ServiceStats:
+        with self._lock:
+            lats = sorted(self._latencies)
+            windows, blobs = self._windows, self._blobs
+            dispatches = self._dispatches
+            hits, misses = self._cache_hits, self._cache_misses
+            errors = self._errors
+            cache_bytes = self._cache.bytes if self._cache else 0
+
+        def pct(p: float) -> float:
+            if not lats:
+                return 0.0
+            return lats[min(len(lats) - 1, int(p * (len(lats) - 1)))] * 1e3
+
+        return ServiceStats(
+            windows=windows, blobs=blobs, dispatches=dispatches,
+            cache_hits=hits, cache_misses=misses, errors=errors,
+            cache_bytes=cache_bytes,
+            blobs_per_window=blobs / max(1, windows),
+            dispatches_per_window=dispatches / max(1, windows),
+            cache_hit_rate=hits / max(1, hits + misses),
+            latency_p50_ms=pct(0.50), latency_p99_ms=pct(0.99))
+
+    # -------------------------------------------------------------- worker
+
+    def _worker_loop(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is _CLOSE:
+                break
+            window: List[_Request] = list(item)
+            deadline = time.perf_counter() + self.max_delay_ms / 1e3
+            closing = False
+            while len(window) < self.max_batch_blobs:
+                remaining = deadline - time.perf_counter()
+                if remaining <= 0:
+                    break
+                try:
+                    nxt = self._q.get(timeout=min(remaining,
+                                                  self.idle_ms / 1e3))
+                except queue.Empty:
+                    break                        # queue idle — flush early
+                if nxt is _CLOSE:
+                    closing = True
+                    break
+                window.extend(nxt)
+            try:
+                self._process_window(window)
+            except BaseException as e:   # the worker must survive anything:
+                # a dead worker would hang every outstanding & future request
+                for req in window:
+                    if not req.future.done():
+                        self._fail(req, e)
+            if closing:
+                break
+
+    def _resolve(self, req: _Request, value: np.ndarray) -> None:
+        with self._lock:
+            self._latencies.append(time.perf_counter() - req.t_submit)
+        try:
+            req.future.set_result(value)
+        except BaseException:            # future cancelled by the caller
+            pass
+
+    def _fail(self, req: _Request, exc: BaseException) -> None:
+        with self._lock:
+            self._errors += 1
+            self._latencies.append(time.perf_counter() - req.t_submit)
+        try:
+            req.future.set_exception(exc)
+        except BaseException:            # future cancelled by the caller
+            pass
+
+    def _process_window(self, window: List[_Request]) -> None:
+        """One micro-batch: cache/dedupe pass, then one fused dispatch per
+        group key; failures are isolated to the request (bad metadata) or
+        the group (decode error) that caused them."""
+        hits = misses = dispatches = 0
+        # group misses by dispatch key; dedupe identical payloads in-window
+        # (by content digest with the cache on, by blob identity without)
+        groups: "Dict[tuple, collections.OrderedDict]" = {}
+        for req in window:
+            try:
+                key = fmt.group_key(req.blob)
+            except Exception as e:
+                self._fail(req, e)
+                continue
+            dedupe_key = req.digest if req.digest is not None \
+                else id(req.blob)
+            cached = (self._cache.get(req.digest)
+                      if self._cache is not None else None)
+            if cached is not None:
+                hits += 1
+                self._resolve(req, cached.copy())
+                continue
+            misses += 1
+            groups.setdefault(key, collections.OrderedDict()) \
+                  .setdefault(dedupe_key, []).append(req)
+
+        for key, by_key in groups.items():
+            reps = [reqs[0].blob for reqs in by_key.values()]
+            try:
+                merged = fmt.concat_blobs(reps)
+                if self.bucket_shapes:
+                    merged = pad_table_to_bucket(merged)
+                table = self.engine.decompress_table(merged)
+                dispatches += 1
+            except Exception as e:
+                for reqs in by_key.values():
+                    for req in reqs:
+                        self._fail(req, e)
+                continue
+            row = 0
+            for reqs in by_key.values():
+                blob = reqs[0].blob
+                rows = table[row:row + blob.num_chunks].copy()
+                row += blob.num_chunks
+                try:
+                    out = fmt.reassemble(blob, rows)
+                except Exception as e:   # bad per-blob metadata fails alone
+                    for req in reqs:
+                        self._fail(req, e)
+                    continue
+                if self._cache is not None and reqs[0].digest is not None:
+                    self._cache.put(reqs[0].digest, out)
+                self._resolve(reqs[0], out)
+                for dup in reqs[1:]:
+                    self._resolve(dup, out.copy())
+
+        with self._lock:
+            self._windows += 1
+            self._blobs += len(window)
+            self._dispatches += dispatches
+            self._cache_hits += hits
+            self._cache_misses += misses
+
+
+# Process-wide default service (``api.decompress_many`` routes through it).
+_default_service: Optional[DecompressionService] = None
+_default_lock = threading.Lock()
+
+
+def default_service() -> DecompressionService:
+    """The lazily-created shared service.  Recreated transparently if a
+    previous one was closed.  ``bucket_shapes`` AND the cache stay off here
+    so one-shot ``api.decompress_many`` batches keep exact, call-local
+    dispatch accounting (one dispatch per group, every time — no hidden
+    process-wide memory of earlier calls); long-lived serving paths should
+    construct their own service with bucketing + cache on."""
+    global _default_service
+    with _default_lock:
+        if _default_service is None or _default_service.closed:
+            _default_service = DecompressionService(bucket_shapes=False,
+                                                    cache_bytes=0)
+        return _default_service

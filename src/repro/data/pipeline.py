@@ -13,6 +13,7 @@ latency-hiding story.
 """
 from __future__ import annotations
 
+import collections
 import queue
 import threading
 from typing import Dict, Iterator, List, Optional
@@ -25,6 +26,7 @@ from repro.core import batch as cbatch
 from repro.core import encoders as enc
 from repro.core import format as fmt
 from repro.core.engine import CodagEngine, EngineConfig
+from repro.core.server import DecompressionService
 
 
 def synthetic_corpus(n_tokens: int, vocab: int, seed: int = 0,
@@ -80,6 +82,26 @@ class CompressedTokenStore:
                                                engine):
                 yield out.astype(np.int32)
 
+    def decoded_shards_async(self, service: DecompressionService,
+                             lookahead: int = 4) -> Iterator[np.ndarray]:
+        """Decode shards through a ``DecompressionService``: keep up to
+        ``lookahead`` shard requests in flight and yield results in order.
+        The service worker overlaps decode of shard i+1..i+lookahead with
+        the consumer's use of shard i (and coalesces the in-flight shards
+        into fused dispatches), replacing the loader's ad-hoc prefetch
+        thread."""
+        futs: "collections.deque" = collections.deque()
+        idx = 0
+        while idx < len(self.blobs) and len(futs) < max(1, lookahead):
+            futs.append(service.submit(self.blobs[idx]))
+            idx += 1
+        while futs:
+            out = futs.popleft().result()
+            if idx < len(self.blobs):
+                futs.append(service.submit(self.blobs[idx]))
+                idx += 1
+            yield out.astype(np.int32)
+
 
 class CompressedLoader:
     """Batches (tokens, labels) from a CompressedTokenStore with on-device
@@ -88,18 +110,28 @@ class CompressedLoader:
     Peak decoded-shard buffering is ``decode_window`` (shards fused into one
     batched dispatch, materialized together) plus the prefetch queue's 2 —
     not the single shard of the pre-batching loader.  ``decode_window=1``
-    restores the old one-shard-per-dispatch behavior."""
+    restores the old one-shard-per-dispatch behavior.
+
+    ``service``: decode through a shared ``DecompressionService`` instead of
+    a private engine + prefetch thread.  The loader keeps ``decode_window``
+    shard requests in flight (``decoded_shards_async``): the service worker
+    owns the decode concurrency, coalesces the in-flight shards into fused
+    dispatches, and its decoded-blob cache makes repeat epochs over the same
+    shards dispatch-free."""
 
     def __init__(self, store: CompressedTokenStore, batch: int, seq: int,
                  engine: Optional[CodagEngine] = None, prefetch: bool = True,
-                 decode_window: int = 4):
+                 decode_window: int = 4,
+                 service: Optional[DecompressionService] = None):
         self.store = store
         self.batch = batch
         self.seq = seq
         self.engine = engine or CodagEngine(EngineConfig())
         self.prefetch = prefetch
         # shards whose chunks are fused into one batched decode dispatch
+        # (engine mode) or kept in flight on the service (service mode)
         self.decode_window = decode_window
+        self.service = service
 
     def __iter__(self) -> Iterator[Dict[str, jnp.ndarray]]:
         need = self.batch * self.seq + 1
@@ -107,11 +139,15 @@ class CompressedLoader:
 
         def shard_iter():
             while True:  # loop over shards forever
-                yield from self.store.decoded_shards(
-                    self.engine, window=self.decode_window)
+                if self.service is not None:
+                    yield from self.store.decoded_shards_async(
+                        self.service, lookahead=self.decode_window)
+                else:
+                    yield from self.store.decoded_shards(
+                        self.engine, window=self.decode_window)
 
         src = shard_iter()
-        if self.prefetch:
+        if self.prefetch and self.service is None:
             q: "queue.Queue" = queue.Queue(maxsize=2)
 
             def worker():
@@ -122,6 +158,8 @@ class CompressedLoader:
             t.start()
             get = q.get
         else:
+            # service mode: the service worker already decodes ahead of the
+            # consumer — no ad-hoc prefetch thread needed.
             get = lambda: next(src)
 
         while True:

@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import contextlib
 import functools
+import threading
 from typing import Any, Dict
 
 import jax
@@ -44,8 +45,11 @@ def _decode_impl(dev: Dict[str, Any], *, codec: str, width: int,
 
 # Dispatch observers (``count_dispatches``).  A plain list-of-lists instead
 # of rebinding the module attribute: nested/overlapping contexts each get
-# every dispatch, and exiting one never clobbers another.
+# every dispatch, and exiting one never clobbers another.  Dispatches may be
+# issued from worker threads (the DecompressionService), so registration,
+# unregistration, and the record fan-out all happen under one lock.
 _observers: list = []
+_observers_lock = threading.Lock()
 
 
 def decode(dev: Dict[str, Any], *, codec: str, width: int, chunk_elems: int,
@@ -56,8 +60,9 @@ def decode(dev: Dict[str, Any], *, codec: str, width: int, chunk_elems: int,
         rec = {"num_chunks": int(dev["comp"].shape[0]), "codec": codec,
                "width": width, "chunk_elems": chunk_elems, "backend": backend,
                "interpret": interpret, "bits": bits}
-        for calls in _observers:
-            calls.append(dict(rec))
+        with _observers_lock:
+            for calls in _observers:
+                calls.append(dict(rec))
     return _decode_impl(dev, codec=codec, width=width,
                         chunk_elems=chunk_elems, backend=backend,
                         interpret=interpret, bits=bits)
@@ -73,15 +78,17 @@ def count_dispatches():
     while it is open, and closing one leaves the others intact.
     """
     calls: list = []
-    _observers.append(calls)
+    with _observers_lock:
+        _observers.append(calls)
     try:
         yield calls
     finally:
         # remove by identity: two open contexts may hold equal-valued lists
-        for i, obs in enumerate(_observers):
-            if obs is calls:
-                del _observers[i]
-                break
+        with _observers_lock:
+            for i, obs in enumerate(_observers):
+                if obs is calls:
+                    del _observers[i]
+                    break
 
 
 def table_inputs(table: fmt.CompressedBlob):

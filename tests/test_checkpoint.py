@@ -71,6 +71,34 @@ def test_compressed_restore_is_batched(tmp_path):
     assert len(calls) == 3
 
 
+def test_restore_through_service(tmp_path):
+    """restore(service=) decodes every compressed leaf through one
+    DecompressionService — bit-exact, and all same-group leaves still share
+    one fused dispatch (now issued by the service worker)."""
+    from repro.core.server import DecompressionService
+    from repro.kernels import ops
+
+    s = {f"layer{i}": jnp.asarray(np.repeat(np.arange(40, dtype=np.int32), 60))
+         for i in range(6)}
+    ckpt.save(str(tmp_path), 4, s, codec=fmt.RLE_V2)
+
+    with DecompressionService(cache_bytes=0, bucket_shapes=False) as svc:
+        with ops.count_dispatches() as calls:
+            got = ckpt.restore(str(tmp_path), 4, s, service=svc)
+        stats = svc.stats()
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), s, got)
+    assert len(calls) == 1
+    assert stats.blobs == 6 and stats.dispatches == 1
+
+    # engine= and service= pick different decode owners; both is an error
+    from repro.core.engine import CodagEngine
+    with DecompressionService() as svc2:
+        with pytest.raises(ValueError, match="not both"):
+            ckpt.restore(str(tmp_path), 4, s, service=svc2,
+                         engine=CodagEngine())
+
+
 def test_retention(tmp_path):
     s = _state()
     for step in (1, 2, 3, 4, 5):

@@ -67,6 +67,48 @@ def test_windowed_batched_decode_matches_per_shard():
     assert len(calls) == (len(store.blobs) + 3) // 4
 
 
+def test_loader_service_mode_matches_engine_mode():
+    """CompressedLoader(service=) replaces the ad-hoc prefetch thread with
+    DecompressionService futures and must stream identical batches."""
+    from repro.core.server import DecompressionService
+
+    toks = pipeline.synthetic_corpus(1 << 14, vocab=700, seed=13)
+    store = pipeline.CompressedTokenStore.build(
+        toks, 700, shard_tokens=1 << 12, codec=fmt.RLE_V2, chunk_bytes=2048)
+    ref_loader = pipeline.CompressedLoader(store, batch=2, seq=48,
+                                           prefetch=False)
+    with DecompressionService(max_delay_ms=10) as svc:
+        svc_loader = pipeline.CompressedLoader(store, batch=2, seq=48,
+                                               service=svc)
+        for i, (ref, got) in enumerate(zip(ref_loader, svc_loader)):
+            np.testing.assert_array_equal(np.asarray(ref["tokens"]),
+                                          np.asarray(got["tokens"]))
+            np.testing.assert_array_equal(np.asarray(ref["labels"]),
+                                          np.asarray(got["labels"]))
+            if i >= 3:
+                break
+        stats = svc.stats()
+    assert stats.blobs >= len(store.blobs)
+    # epoch 2 re-reads the same shards: the decoded-blob cache absorbs them
+    assert stats.cache_hits > 0 or stats.blobs == len(store.blobs)
+
+
+def test_decoded_shards_async_order_and_exactness():
+    from repro.core.server import DecompressionService
+
+    from repro.core.engine import CodagEngine
+
+    toks = pipeline.synthetic_corpus(1 << 14, vocab=400, seed=17)
+    store = pipeline.CompressedTokenStore.build(
+        toks, 400, shard_tokens=1 << 12, codec=fmt.RLE_V1, chunk_bytes=2048)
+    eng_shards = list(store.decoded_shards(CodagEngine(), window=1))
+    with DecompressionService() as svc:
+        svc_shards = list(store.decoded_shards_async(svc, lookahead=3))
+    assert len(svc_shards) == len(eng_shards)
+    for a, b in zip(eng_shards, svc_shards):
+        np.testing.assert_array_equal(a, b)
+
+
 def test_tdeflate_token_store():
     toks = pipeline.synthetic_corpus(1 << 14, vocab=30000, seed=9)
     store = pipeline.CompressedTokenStore.build(

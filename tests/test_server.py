@@ -1,0 +1,328 @@
+"""DecompressionService: concurrency, coalescing, cache, shutdown, errors.
+
+Covers the ISSUE-3 acceptance criterion: >= 4 concurrent same-group
+requests resolve bit-exactly through FEWER engine dispatches than blobs
+(window coalescing observable via ``ops.count_dispatches``), plus cache
+hit/miss accounting, graceful ``close()`` draining, exception propagation
+through futures, and the thread-safety regression for the dispatch
+observer list.
+"""
+import dataclasses
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import api, format as fmt, registry
+from repro.core import server as srv
+from repro.core.engine import CodagEngine, EngineConfig
+from repro.kernels import ops
+
+RNG = np.random.default_rng(23)
+
+
+def _runs_u32(n, seed=None):
+    rng = np.random.default_rng(seed) if seed is not None else RNG
+    vals = rng.integers(0, 90, max(4, n // 40)).astype(np.uint32)
+    return np.repeat(vals, rng.integers(1, 80, len(vals)))[:n]
+
+
+def _mixed_pool():
+    """One array per registered codec (mixed group keys)."""
+    items = []
+    for i, name in enumerate(registry.names()):
+        items.append((name,
+                      registry.get(name).demo_data(600 + 40 * i, RNG)))
+    return items
+
+
+@pytest.fixture
+def counted():
+    with ops.count_dispatches() as calls:
+        yield calls
+
+
+def test_concurrent_mixed_codecs_bit_exact():
+    """6 producer threads x every registered codec, all through one service."""
+    pool = _mixed_pool()
+    blobs = {name: api.compress(arr, name, chunk_bytes=512).blobs[0]
+             for name, arr in pool}
+    n_threads = 6
+    results = [dict() for _ in range(n_threads)]
+    with srv.DecompressionService(max_delay_ms=20) as svc:
+        barrier = threading.Barrier(n_threads)
+
+        def producer(tid):
+            barrier.wait()
+            futs = {name: svc.submit(blobs[name]) for name, _ in pool}
+            results[tid] = {name: f.result() for name, f in futs.items()}
+
+        threads = [threading.Thread(target=producer, args=(i,))
+                   for i in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+
+    for tid in range(n_threads):
+        for name, arr in pool:
+            got = results[tid][name]
+            assert got.dtype == arr.dtype, f"{tid}/{name}"
+            assert np.array_equal(got, arr), f"{tid}/{name}"
+
+
+def test_window_coalescing_reduces_dispatches(counted):
+    """ISSUE-3 acceptance: >= 4 concurrent same-group requests resolve
+    bit-exactly through fewer engine dispatches than blobs."""
+    n = 8
+    arrays = [_runs_u32(700, seed=100 + i) for i in range(n)]
+    blobs = [api.compress(a, fmt.RLE_V2, chunk_bytes=512).blobs[0]
+             for a in arrays]
+    outs = [None] * n
+    # max_batch_blobs == n flushes the instant the last request lands;
+    # max_delay/idle are generous so a descheduled thread still coalesces.
+    with srv.DecompressionService(max_batch_blobs=n, max_delay_ms=2000,
+                                  idle_ms=2000, cache_bytes=0) as svc:
+        barrier = threading.Barrier(n)
+
+        def producer(i):
+            barrier.wait()
+            outs[i] = svc.submit(blobs[i]).result()
+
+        threads = [threading.Thread(target=producer, args=(i,))
+                   for i in range(n)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        stats = svc.stats()
+
+    for a, o in zip(arrays, outs):
+        assert np.array_equal(a, o)
+    assert 1 <= len(counted) < n        # coalesced: fewer dispatches than blobs
+    assert stats.blobs == n
+    assert stats.dispatch_amplification < 1.0
+    # all blobs share one group key, so any window issues exactly 1 dispatch
+    assert len(counted) == stats.windows
+
+
+def test_cache_hit_miss_accounting(counted):
+    arr = _runs_u32(900, seed=7)
+    other_arr = _runs_u32(900, seed=8)
+    blob = api.compress(arr, fmt.RLE_V2, chunk_bytes=512).blobs[0]
+    other = api.compress(other_arr, fmt.RLE_V2, chunk_bytes=512).blobs[0]
+    with srv.DecompressionService(cache_bytes=8 << 20) as svc:
+        first = svc.decode(blob)
+        second = svc.decode(blob)          # content-identical -> cache hit
+        third = svc.decode(other)          # different content -> miss
+        # the cached copy is private: mutating a returned array must not
+        # corrupt later hits
+        second[:10] = 0
+        fourth = svc.decode(blob)
+        stats = svc.stats()
+    assert np.array_equal(first, arr)
+    assert np.array_equal(third, other_arr)
+    assert np.array_equal(fourth, arr)
+    assert stats.cache_hits == 2
+    assert stats.cache_misses == 2
+    assert len(counted) == 2               # hits issued no dispatch
+    assert stats.cache_bytes > 0
+
+
+def test_cache_byte_budget_evicts():
+    arr = _runs_u32(800, seed=9)
+    blob = api.compress(arr, fmt.RLE_V2, chunk_bytes=512).blobs[0]
+    # budget smaller than one decoded blob: nothing is ever cached
+    with srv.DecompressionService(cache_bytes=64) as svc:
+        svc.decode(blob)
+        svc.decode(blob)
+        stats = svc.stats()
+    assert stats.cache_hits == 0
+    assert stats.cache_misses == 2
+    assert stats.cache_bytes == 0
+
+
+def test_in_window_dedupe_decodes_once(counted):
+    """Identical payloads submitted in one window share a single decode."""
+    arr = _runs_u32(600, seed=11)
+    ca = api.compress(arr, fmt.RLE_V2, chunk_bytes=512)
+    blobs = [ca.blobs[0]] * 5
+    with srv.DecompressionService(cache_bytes=0) as svc:
+        futs = svc.submit_many(blobs)
+        outs = [f.result() for f in futs]
+    assert len(counted) == 1
+    for o in outs:
+        assert np.array_equal(o, arr)
+    # resolved copies are independent
+    outs[0][:5] = 0
+    assert np.array_equal(outs[1], arr)
+
+
+def test_close_drains_without_deadlock():
+    arrays = [_runs_u32(500, seed=30 + i) for i in range(12)]
+    blobs = [api.compress(a, fmt.RLE_V2, chunk_bytes=512).blobs[0]
+             for a in arrays]
+    svc = srv.DecompressionService(max_delay_ms=5000, idle_ms=5000,
+                                   max_batch_blobs=1000)
+    futs = [svc.submit(b) for b in blobs]
+    # close() must cut through the 5s window and drain everything queued
+    svc.close(timeout=60)
+    assert not svc._worker.is_alive()
+    for a, f in zip(arrays, futs):
+        assert f.done()
+        assert np.array_equal(f.result(), a)
+    with pytest.raises(RuntimeError, match="closed"):
+        svc.submit(blobs[0])
+    # double close is a no-op
+    svc.close()
+
+
+def test_exception_propagates_through_future():
+    good_arr = _runs_u32(600, seed=41)
+    good = api.compress(good_arr, fmt.RLE_V2, chunk_bytes=512).blobs[0]
+    bad = dataclasses.replace(good, codec="no_such_codec")
+    with srv.DecompressionService() as svc:
+        fut_bad, fut_good = svc.submit_many([bad, good])
+        # the bad request fails alone; its window-mates still succeed
+        with pytest.raises(ValueError, match="no_such_codec"):
+            fut_bad.result(timeout=60)
+        assert np.array_equal(fut_good.result(timeout=60), good_arr)
+        assert svc.stats().errors == 1
+
+
+def test_worker_survives_bad_blob_metadata():
+    """Regression: a blob whose metadata blows up AFTER the group decode
+    (inconsistent orig_shape -> reassemble raises) fails only its own
+    future; window-mates resolve and the worker keeps serving."""
+    good_arr = _runs_u32(600, seed=43)
+    good = api.compress(good_arr, fmt.RLE_V2, chunk_bytes=512).blobs[0]
+    bad = dataclasses.replace(good, orig_shape=(999_999,))
+    with srv.DecompressionService() as svc:
+        fut_bad, fut_good = svc.submit_many([bad, good])
+        with pytest.raises(ValueError):
+            fut_bad.result(timeout=60)
+        assert np.array_equal(fut_good.result(timeout=60), good_arr)
+        # the worker thread survived and still serves new requests
+        assert np.array_equal(svc.decode(good), good_arr)
+        assert svc._worker.is_alive()
+
+
+def test_cancelled_future_does_not_kill_worker():
+    """Regression: a caller cancelling a pending future must not crash the
+    worker when it later tries to resolve it."""
+    arr = _runs_u32(500, seed=44)
+    blob = api.compress(arr, fmt.RLE_V2, chunk_bytes=512).blobs[0]
+    with srv.DecompressionService(max_delay_ms=200, idle_ms=200) as svc:
+        fut = svc.submit(blob)
+        fut.cancel()
+        # worker must survive resolving the cancelled future and keep going
+        assert np.array_equal(svc.decode(blob), arr)
+        assert svc._worker.is_alive()
+
+
+def test_engine_and_service_mutually_exclusive():
+    arr = _runs_u32(400, seed=45)
+    ca = api.compress(arr, fmt.RLE_V2, chunk_bytes=512)
+    with srv.DecompressionService() as svc:
+        with pytest.raises(ValueError, match="not both"):
+            api.decompress_many([ca], CodagEngine(EngineConfig()),
+                                service=svc)
+
+
+def test_submit_array_recombines_planes():
+    arr = np.repeat(RNG.integers(0, 2 ** 50, 20).astype(np.uint64),
+                    RNG.integers(1, 50, 20))
+    ca = api.compress(arr, fmt.RLE_V2, chunk_bytes=512)
+    assert len(ca.blobs) == 2              # lo/hi plane decomposition
+    with srv.DecompressionService() as svc:
+        out = svc.submit_array(ca).result(timeout=60)
+    assert out.dtype == arr.dtype
+    assert np.array_equal(out, arr)
+
+
+def test_decode_arrays_one_dispatch_per_group(counted):
+    arrays = [_runs_u32(700, seed=50 + i) for i in range(4)]
+    arrays.append(RNG.integers(0, 200, 500).astype(np.uint8))
+    cas = [api.compress(a, fmt.RLE_V1, chunk_bytes=512) for a in arrays]
+    with srv.DecompressionService(cache_bytes=0, bucket_shapes=False) as svc:
+        outs = svc.decode_arrays(cas)
+    for a, o in zip(arrays, outs):
+        assert np.array_equal(a, o)
+    assert len(counted) == 2               # u32 group + u8 group
+
+
+def test_pad_table_to_bucket_roundtrip():
+    """Shape-bucketed tables (pow2 rows/cols of zero-length chunks) decode
+    the real rows bit-exactly on a merged multi-blob table."""
+    blobs = [api.compress(_runs_u32(700, seed=60 + i), fmt.RLE_V2,
+                          chunk_bytes=512).blobs[0] for i in range(3)]
+    merged = fmt.concat_blobs(blobs)
+    padded = srv.pad_table_to_bucket(merged)
+    assert padded.num_chunks >= merged.num_chunks
+    assert padded.num_chunks & (padded.num_chunks - 1) == 0   # pow2
+    eng = CodagEngine(EngineConfig())
+    table = eng.decompress_table(padded)[:merged.num_chunks]
+    row = 0
+    for b in blobs:
+        rows = table[row:row + b.num_chunks]
+        row += b.num_chunks
+        got = fmt.reassemble(b, rows.copy())
+        assert np.array_equal(got, fmt.reassemble(
+            b, eng.decompress_table(b)))
+
+
+def test_stats_latency_and_window_shape():
+    blobs = [api.compress(_runs_u32(500, seed=70 + i), fmt.RLE_V2,
+                          chunk_bytes=512).blobs[0] for i in range(6)]
+    with srv.DecompressionService(max_delay_ms=20) as svc:
+        [f.result() for f in svc.submit_many(blobs)]
+        stats = svc.stats()
+    assert stats.windows >= 1
+    assert stats.blobs == 6
+    assert stats.blobs_per_window >= 1.0
+    assert 0.0 <= stats.cache_hit_rate <= 1.0
+    assert 0.0 <= stats.latency_p50_ms <= stats.latency_p99_ms
+
+
+def test_default_service_recreated_after_close():
+    svc = srv.default_service()
+    assert srv.default_service() is svc
+    svc.close()
+    svc2 = srv.default_service()
+    assert svc2 is not svc and not svc2.closed
+    arr = _runs_u32(400, seed=80)
+    (out,) = api.decompress_many([api.compress(arr, fmt.RLE_V2,
+                                               chunk_bytes=512)])
+    assert np.array_equal(out, arr)
+
+
+def test_count_dispatches_thread_safe_under_churn():
+    """Regression (ISSUE-3 satellite): the observer list is mutated from
+    test threads while the service worker fans out dispatch records — the
+    unlocked version could skip observers (del during iteration) or corrupt
+    the list.  A long-lived context must see EVERY dispatch issued while
+    open, regardless of concurrent register/unregister churn."""
+    arr = _runs_u32(400, seed=90)
+    blob = api.compress(arr, fmt.RLE_V2, chunk_bytes=512).blobs[0]
+    dev, bits = ops.table_inputs(blob)
+    stop = threading.Event()
+
+    def churn():
+        while not stop.is_set():
+            with ops.count_dispatches():
+                pass
+
+    churners = [threading.Thread(target=churn) for _ in range(4)]
+    for t in churners:
+        t.start()
+    try:
+        n = 60
+        with ops.count_dispatches() as calls:
+            for _ in range(n):
+                ops.decode(dev, codec=blob.codec, width=blob.width,
+                           chunk_elems=blob.chunk_elems, bits=bits)
+        assert len(calls) == n
+    finally:
+        stop.set()
+        for t in churners:
+            t.join()
