@@ -21,12 +21,11 @@ CI perf-trajectory file BENCH_ablations.json).
 from __future__ import annotations
 
 import argparse
-import json
-from pathlib import Path
 
 import jax.numpy as jnp
 
-from benchmarks.common import codec_matrix, demo_corpus, geomean, timeit
+from benchmarks.common import (codec_matrix, demo_corpus, geomean, timeit,
+                               write_bench_json)
 from repro.core import registry
 from repro.core.engine import CodagEngine, EngineConfig
 
@@ -100,13 +99,9 @@ def main() -> None:
         print(f"{name},{value},{derived}")
 
     if args.out:
-        payload = {name: value for name, value, _ in rows}
-        payload["smoke"] = bool(args.smoke)
-        payload["codecs"] = list(codec_matrix())
-        out = Path(args.out)
-        out.parent.mkdir(parents=True, exist_ok=True)
-        out.write_text(json.dumps(payload, indent=2))
-        print(f"# wrote {out}")
+        cfg = {"size_mb": args.size_mb, "smoke": bool(args.smoke),
+               "codecs": list(codec_matrix())}
+        print(f"# wrote {write_bench_json(args.out, 'ablations', cfg, rows)}")
 
 
 if __name__ == "__main__":

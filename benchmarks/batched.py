@@ -14,13 +14,11 @@ with --out, a JSON artifact (the CI perf-trajectory file BENCH_batched.json).
 from __future__ import annotations
 
 import argparse
-import json
 import time
-from pathlib import Path
 
 import numpy as np
 
-from benchmarks.common import codec_matrix, demo_elems
+from benchmarks.common import codec_matrix, demo_elems, write_bench_json
 from repro.core import api, registry
 from repro.core.engine import CodagEngine, EngineConfig
 from repro.kernels import ops
@@ -103,12 +101,9 @@ def main() -> None:
         print(f"{name},{value},{derived}")
 
     if args.out:
-        payload = {name: value for name, value, _ in rows}
-        payload["smoke"] = bool(args.smoke)
-        out = Path(args.out)
-        out.parent.mkdir(parents=True, exist_ok=True)
-        out.write_text(json.dumps(payload, indent=2))
-        print(f"# wrote {out}")
+        cfg = {"n_arrays": args.n_arrays, "kb_per_array": args.kb_per_array,
+               "iters": args.iters, "smoke": bool(args.smoke)}
+        print(f"# wrote {write_bench_json(args.out, 'batched', cfg, rows)}")
 
 
 if __name__ == "__main__":

@@ -1,7 +1,9 @@
-"""Shared benchmark machinery: timing, dataset/blob caching, codec matrix."""
+"""Shared benchmark machinery: timing, dataset/blob caching, codec matrix,
+and the one BENCH_*.json artifact schema."""
 from __future__ import annotations
 
 import functools
+import json
 import pickle
 import time
 from pathlib import Path
@@ -13,6 +15,30 @@ from repro.core import api, registry
 from benchmarks import datasets as ds
 
 CACHE = Path("experiments/.bench_cache")
+
+
+def write_bench_json(path, name: str, config: dict, rows) -> Path:
+    """Write one benchmark artifact in the shared schema.
+
+    Every ``BENCH_*.json`` the suite emits (``benchmarks.run --all`` and
+    each module's ``--out``) has the same four top-level keys, so the CI
+    perf-trajectory tooling can diff any of them uniformly:
+
+        {"name": ...,       # suite name ("batched", "serving", ...)
+         "config": {...},   # the knobs this run used (sizes, counts, smoke)
+         "metrics": {...},  # flat metric name -> value (the CSV rows)
+         "timestamp": ...}  # UTC ISO-8601
+    """
+    payload = {
+        "name": name,
+        "config": dict(config),
+        "metrics": {n: v for n, v, _ in rows},
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+    }
+    p = Path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(json.dumps(payload, indent=2))
+    return p
 
 
 def codec_matrix() -> tuple:

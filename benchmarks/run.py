@@ -1,6 +1,7 @@
 """Benchmark harness — one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--size-mb 1.0] [--only X]
+                                            [--all] [--smoke] [--out-dir D]
 
 Prints ``name,value,derived`` CSV rows:
   throughput.py       -> Fig. 7 (absolute) + Fig. 8 (speedups)
@@ -13,12 +14,55 @@ Prints ``name,value,derived`` CSV rows:
   serving.py          -> open-loop multi-tenant DecompressionService:
                          dispatch amplification, latency percentiles,
                          cache hit rate
+  device_resident.py  -> host-round-trip vs device-resident decode→consume
+                         (transfer counts + throughput)
+
+``--all`` additionally writes one ``BENCH_<suite>.json`` per suite (shared
+schema ``{name, config, metrics, timestamp}`` — see
+``common.write_bench_json``) into ``--out-dir`` (default: repo root), which
+CI uploads as a single perf-trajectory artifact.  ``--smoke`` shrinks every
+suite to CI-friendly sizes.
 """
 from __future__ import annotations
 
 import argparse
 import sys
 import time
+from pathlib import Path
+
+
+def build_suites(args) -> dict:
+    """{suite: (config_dict, thunk)} — the thunk returns CSV rows."""
+    from benchmarks import (ablations, batched, device_resident, ratios,
+                            roofline_report, serving, throughput)
+    size_mb = 0.05 if args.smoke else args.size_mb
+    batched_cfg = ({"n_arrays": 8, "kb_per_array": 8, "iters": 1}
+                   if args.smoke else
+                   {"n_arrays": 12,
+                    "kb_per_array": max(8, int(args.size_mb * 64)),
+                    "iters": 3})
+    serving_cfg = ({"n_requests": 40, "n_tenants": 4, "n_unique": 10,
+                    "kb_per_blob": 8, "rate_per_tenant": 200.0}
+                   if args.smoke else
+                   {"n_requests": 64, "n_tenants": 4, "n_unique": 16,
+                    "kb_per_blob": max(8, int(args.size_mb * 32))})
+    device_cfg = ({"n_layers": 2, "k": 128, "n": 128, "iters": 1}
+                  if args.smoke else {"n_layers": 4, "iters": 3})
+    return {
+        "throughput": ({"size_mb": size_mb},
+                       lambda: throughput.run(size_mb)),
+        "ablation_decode": ({"size_mb": min(size_mb, 0.5)},
+                            lambda: ablations.run_decode_ablation(
+                                min(size_mb, 0.5))),
+        "ablation_unit": ({"size_mb": min(size_mb, 0.5)},
+                          lambda: ablations.run_unit_ablation(
+                              min(size_mb, 0.5))),
+        "ratios": ({"size_mb": size_mb}, lambda: ratios.run(size_mb)),
+        "roofline": ({}, roofline_report.run),
+        "batched": (batched_cfg, lambda: batched.run(**batched_cfg)),
+        "serving": (serving_cfg, lambda: serving.run(**serving_cfg)),
+        "device": (device_cfg, lambda: device_resident.run(**device_cfg)),
+    }
 
 
 def main() -> None:
@@ -27,35 +71,35 @@ def main() -> None:
                 help="per-dataset size; 0.25 keeps the full suite ~10 min on CPU")
     ap.add_argument("--only", default=None,
                     help="throughput|ablation_decode|ablation_unit|ratios|"
-                         "roofline|batched|serving")
+                         "roofline|batched|serving|device")
+    ap.add_argument("--all", action="store_true",
+                    help="write one BENCH_<suite>.json per suite "
+                         "(shared schema) into --out-dir")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI sizes: every suite finishes in seconds")
+    ap.add_argument("--out-dir", default=".",
+                    help="where --all writes the BENCH_*.json artifacts")
     args = ap.parse_args()
 
-    from benchmarks import (ablations, batched, ratios, roofline_report,
-                            serving, throughput)
-    suites = {
-        "throughput": lambda: throughput.run(args.size_mb),
-        "ablation_decode": lambda: ablations.run_decode_ablation(
-            min(args.size_mb, 0.5)),
-        "ablation_unit": lambda: ablations.run_unit_ablation(
-            min(args.size_mb, 0.5)),
-        "ratios": lambda: ratios.run(args.size_mb),
-        "roofline": roofline_report.run,
-        "batched": lambda: batched.run(
-            n_arrays=12, kb_per_array=max(8, int(args.size_mb * 64))),
-        "serving": lambda: serving.run(
-            n_requests=64, n_tenants=4, n_unique=16,
-            kb_per_blob=max(8, int(args.size_mb * 32))),
-    }
+    from benchmarks.common import write_bench_json
+    suites = build_suites(args)
     if args.only:
         suites = {args.only: suites[args.only]}
 
     print("name,value,derived")
     ok = True
-    for sname, fn in suites.items():
+    for sname, (config, fn) in suites.items():
         t0 = time.time()
         try:
-            for name, value, derived in fn():
+            rows = list(fn())
+            for name, value, derived in rows:
                 print(f"{name},{value},{derived}")
+            if args.all:
+                cfg = dict(config, smoke=bool(args.smoke))
+                out = write_bench_json(
+                    Path(args.out_dir) / f"BENCH_{sname}.json",
+                    sname, cfg, rows)
+                print(f"# wrote {out}", flush=True)
         except Exception as e:  # pragma: no cover
             ok = False
             print(f"{sname}/ERROR,{type(e).__name__},{e}", file=sys.stderr)

@@ -25,14 +25,12 @@ with --out, the CI artifact BENCH_serving.json.
 from __future__ import annotations
 
 import argparse
-import json
 import threading
 import time
-from pathlib import Path
 
 import numpy as np
 
-from benchmarks.common import codec_matrix, demo_elems
+from benchmarks.common import codec_matrix, demo_elems, write_bench_json
 from repro.core import api, registry
 from repro.core.engine import CodagEngine, EngineConfig
 from repro.core.server import DecompressionService
@@ -192,12 +190,10 @@ def main() -> None:
         print(f"{name},{value},{derived}")
 
     if args.out:
-        payload = {name: value for name, value, _ in rows}
-        payload["smoke"] = bool(args.smoke)
-        out = Path(args.out)
-        out.parent.mkdir(parents=True, exist_ok=True)
-        out.write_text(json.dumps(payload, indent=2))
-        print(f"# wrote {out}")
+        cfg = {"n_requests": args.n_requests, "n_tenants": args.n_tenants,
+               "n_unique": args.n_unique, "kb_per_blob": args.kb_per_blob,
+               "rate_per_tenant": args.rate, "smoke": bool(args.smoke)}
+        print(f"# wrote {write_bench_json(args.out, 'serving', cfg, rows)}")
 
 
 if __name__ == "__main__":

@@ -105,7 +105,7 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
 def restore(ckpt_dir: str, step: int, like, *, shardings=None,
             engine: Optional[CodagEngine] = None,
             decode_window: Optional[int] = None,
-            service=None):
+            service=None, device_out: bool = False):
     """Restore into the structure of ``like`` (a pytree of arrays or
     ShapeDtypeStructs).  ``shardings``: optional matching pytree of
     NamedShardings — the ELASTIC path: state saved on one mesh is re-laid
@@ -120,13 +120,19 @@ def restore(ckpt_dir: str, step: int, like, *, shardings=None,
     ``service``: a ``core.server.DecompressionService`` to decode through
     instead of a private engine — all leaves ride the service's micro-batch
     windows (sharing dispatches and the decoded-blob cache with any other
-    concurrent restores/requests on the same service)."""
+    concurrent restores/requests on the same service).
+
+    ``device_out``: materialize every leaf as a device-resident jax array —
+    compressed leaves decode, reassemble, and bitcast to their manifest
+    dtype entirely on device (no decode→host→re-upload round trip), and
+    uncompressed leaves upload once.  Requires 64-bit jax types for 8-byte
+    leaf dtypes."""
     if engine is not None and service is not None:
         raise ValueError("pass engine= OR service=, not both: the service "
                          "decodes on its own engine")
     root = Path(ckpt_dir) / f"step_{step}"
     manifest = json.loads((root / MANIFEST).read_text())
-    if service is None:
+    if service is None and not device_out:
         engine = engine or CodagEngine(EngineConfig())
 
     flat_like, tdef = jax.tree_util.tree_flatten(like)
@@ -153,16 +159,31 @@ def restore(ckpt_dir: str, step: int, like, *, shardings=None,
     decoded: list = []
     for j in range(0, len(comp_cas), w):
         if service is not None:
-            decoded.extend(service.decode_arrays(comp_cas[j:j + w]))
+            decoded.extend(service.decode_arrays(comp_cas[j:j + w],
+                                                 device_out=device_out))
         else:
             decoded.extend(codec_api.decompress_many(comp_cas[j:j + w],
-                                                     engine))
-    for i, arr in zip(comp_idx, decoded):
-        entry = manifest["leaves"][keys[i]]
-        leaves[i] = (arr.reshape(-1).view(np.dtype(entry["dtype"]))
-                     .reshape(entry["shape"]))
-    leaves = [leaf.astype(manifest["leaves"][key]["dtype"])
-              for key, leaf in zip(keys, leaves)]
+                                                     engine,
+                                                     device_out=device_out))
+    if device_out:
+        import jax.numpy as jnp
+
+        from repro.core import format as fmt
+        for i, arr in zip(comp_idx, decoded):
+            entry = manifest["leaves"][keys[i]]
+            leaves[i] = fmt.device_view(arr.reshape(-1), entry["dtype"],
+                                        tuple(entry["shape"]))
+        # uncompressed leaves upload once; the astype is a device op
+        leaves = [jnp.asarray(leaf).astype(
+                      np.dtype(manifest["leaves"][key]["dtype"]))
+                  for key, leaf in zip(keys, leaves)]
+    else:
+        for i, arr in zip(comp_idx, decoded):
+            entry = manifest["leaves"][keys[i]]
+            leaves[i] = (arr.reshape(-1).view(np.dtype(entry["dtype"]))
+                         .reshape(entry["shape"]))
+        leaves = [leaf.astype(manifest["leaves"][key]["dtype"])
+                  for key, leaf in zip(keys, leaves)]
     state = tdef.unflatten(leaves)
     if shardings is not None:
         state = jax.tree.map(lambda a, s: jax.device_put(a, s),

@@ -62,9 +62,27 @@ def _combine(ca: CompressedArray, outs: List[np.ndarray]) -> np.ndarray:
     return fmt.combine_planes(outs, ca.orig_dtype, ca.orig_shape)
 
 
+def _combine_device(ca: CompressedArray, outs: List, transformed: bool):
+    if transformed:
+        # epilogue output: plane recombination over transformed values is
+        # undefined — refuse rather than silently drop the hi plane
+        if len(outs) != 1:
+            raise ValueError(
+                f"epilogue cannot be applied to a plane-decomposed "
+                f"{ca.orig_dtype} array ({len(outs)} plane blobs): the "
+                "transform runs per uint32 plane, so the 64-bit value "
+                "cannot be recombined afterwards")
+        return outs[0]
+    return fmt.combine_planes_device(outs, ca.orig_dtype, ca.orig_shape)
+
+
 def decompress(ca: CompressedArray,
-               engine: Optional[CodagEngine] = None) -> np.ndarray:
+               engine: Optional[CodagEngine] = None,
+               device_out: bool = False):
     engine = engine or CodagEngine(EngineConfig())
+    if device_out:
+        return _combine_device(ca, [engine.decompress_device(b)
+                                    for b in ca.blobs], transformed=False)
     return _combine(ca, [engine.decompress(b) for b in ca.blobs])
 
 
@@ -86,11 +104,13 @@ def compress_many(arrays: Sequence[np.ndarray],
 
 def decompress_many(cas: Sequence[CompressedArray],
                     engine: Optional[CodagEngine] = None,
-                    service=None) -> List[np.ndarray]:
+                    service=None, *, device_out: bool = False,
+                    epilogue=None,
+                    epilogue_operands=None) -> List:
     """Batched decompress: every chunk of every array in one launch per
     (codec, width, chunk_elems, bits) group — the CODAG provisioning move.
 
-    With no ``engine``, the call routes through the process-wide
+    With no ``engine``, a host-out call routes through the process-wide
     ``server.default_service()`` (or an explicit ``service=``): all blobs
     enter ONE micro-batch window atomically — same one-dispatch-per-group
     accounting as the direct plan, plus the service's decoded-blob cache
@@ -98,22 +118,44 @@ def decompress_many(cas: Sequence[CompressedArray],
     an ``engine`` keeps the direct synchronous ``BatchPlan`` path (exact
     per-call dispatch control, custom engine configs).
 
+    ``device_out=True`` (the ISSUE-4 tentpole) returns device-resident jax
+    arrays — decode, per-blob scatter, 64-bit plane recombination, and the
+    optional fused ``epilogue`` (a ``kernels.harness.Epilogue``: cast /
+    widen / dequant inside the decode dispatch) all happen on device with
+    zero device→host syncs.  An explicit ``service=`` serves device views
+    through its window machinery; otherwise the direct plan path runs
+    (epilogues are plan-path only — a service window mixes tenants that
+    may want different transforms).
+
     Bit-exact vs. per-array ``decompress``; outputs follow input order.
     """
     if engine is not None and service is not None:
         raise ValueError("pass engine= OR service=, not both: the service "
                          "decodes on its own engine")
+    if epilogue is not None and not device_out:
+        raise ValueError("epilogue requires device_out=True: a fused "
+                         "epilogue's output has no host reassembly path")
     if not cas:
         return []
-    if engine is None:
+    if service is not None or (engine is None and not device_out):
+        if epilogue is not None:
+            raise ValueError("epilogue is not supported on the service "
+                             "path; pass engine= (or no engine) with "
+                             "device_out=True")
         if service is None:
             from repro.core import server as server_mod
             service = server_mod.default_service()
-        return service.decode_arrays(cas)
+        return service.decode_arrays(cas, device_out=device_out)
     flat: List[fmt.CompressedBlob] = []
     spans: List[tuple] = []   # (start, count) into flat, per array
     for ca in cas:
         spans.append((len(flat), len(ca.blobs)))
         flat.extend(ca.blobs)
+    if device_out:
+        plan = batch_mod.BatchPlan.build(flat)
+        outs = plan.execute_device(engine, epilogue=epilogue,
+                                   epilogue_operands=epilogue_operands)
+        return [_combine_device(ca, outs[s:s + n], epilogue is not None)
+                for ca, (s, n) in zip(cas, spans)]
     outs = batch_mod.decompress_blobs(flat, engine)
     return [_combine(ca, outs[s:s + n]) for ca, (s, n) in zip(cas, spans)]

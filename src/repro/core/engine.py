@@ -29,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import format as fmt
+from repro.core import transfers
 from repro.kernels import ops
 
 
@@ -53,14 +54,19 @@ class CodagEngine:
 
     def decompress_chunks(self, dev: Dict[str, Any], *, codec: str,
                           width: int, chunk_elems: int,
-                          bits: int = 0) -> jnp.ndarray:
-        """Decode to (num_chunks, chunk_elems); jit-compatible."""
+                          bits: int = 0, epilogue=None) -> jnp.ndarray:
+        """Decode to (num_chunks, chunk_elems); jit-compatible.
+
+        ``epilogue``: optional ``kernels.harness.Epilogue`` fused into the
+        dispatch (cast/widen/dequant before the matrix reaches a consumer).
+        """
         c = self.config
         backend = self._backend()
         if c.unit == "warp":
             return ops.decode(dev, codec=codec, width=width,
                               chunk_elems=chunk_elems, backend=backend,
-                              interpret=c.interpret, bits=bits)
+                              interpret=c.interpret, bits=bits,
+                              epilogue=epilogue)
         # "block": fixed pool of n_units streams; serial over chunk batches.
         n_chunks = dev["comp"].shape[0]
         nu = min(c.n_units, n_chunks)
@@ -68,37 +74,60 @@ class CodagEngine:
         pad = n_serial * nu - n_chunks
 
         def pad0(x):
-            if x.shape[0] != n_chunks:
-                return x  # shared tables (e.g. bitpack bits)
+            # shared tables (e.g. bitpack bits) and scalar epilogue
+            # operands replicate across serial batches unchanged
+            if x.ndim == 0 or x.shape[0] != n_chunks:
+                return x
             return jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1))
 
         devp = {k: pad0(v) for k, v in dev.items()}
         # out_lens of padding rows are 0 -> decode loops exit immediately.
-        reshaped = {k: v.reshape((n_serial, nu) + v.shape[1:])
-                    if v.shape[0] == n_serial * nu else v
-                    for k, v in devp.items()}
+        # Only per-chunk tables are scanned over; shared tables / scalar
+        # epilogue operands have no n_chunks leading dim and must replicate
+        # to every serial batch via closure (lax.scan requires every
+        # scanned leaf to share the leading dim).
+        scanned = {k: v.reshape((n_serial, nu) + v.shape[1:])
+                   for k, v in devp.items()
+                   if v.ndim and v.shape[0] == n_serial * nu}
+        shared = {k: v for k, v in devp.items() if k not in scanned}
 
         def step(carry, batch):
-            out = ops.decode(batch, codec=codec, width=width,
+            out = ops.decode({**batch, **shared}, codec=codec, width=width,
                              chunk_elems=chunk_elems, backend=backend,
-                             interpret=c.interpret, bits=bits)
+                             interpret=c.interpret, bits=bits,
+                             epilogue=epilogue)
             return carry, out
 
-        _, outs = jax.lax.scan(step, 0, reshaped)
+        _, outs = jax.lax.scan(step, 0, scanned)
         out = outs.reshape((n_serial * nu, chunk_elems))
         return out[:n_chunks]
 
-    def decompress_table(self, table: fmt.CompressedBlob) -> np.ndarray:
+    def decompress_table_device(self, table: fmt.CompressedBlob,
+                                epilogue=None) -> jnp.ndarray:
         """Decode a flat chunk table (a single blob or a multi-blob merge
-        from ``format.concat_blobs``) with one dispatch, no reassembly.
-        Returns the raw (num_chunks, chunk_elems) host matrix in the table's
-        element dtype; callers owning a blob→row mapping scatter it back."""
+        from ``format.concat_blobs``) with one dispatch, no reassembly; the
+        raw (num_chunks, chunk_elems) matrix STAYS on device.  Callers
+        owning a blob→row mapping scatter it back with
+        ``format.reassemble_device``."""
         dev, bits = ops.table_inputs(table)
-        out = self.decompress_chunks(dev, codec=table.codec,
-                                     width=table.width,
-                                     chunk_elems=table.chunk_elems, bits=bits)
-        return np.asarray(jax.device_get(out))
+        return self.decompress_chunks(dev, codec=table.codec,
+                                      width=table.width,
+                                      chunk_elems=table.chunk_elems,
+                                      bits=bits, epilogue=epilogue)
+
+    def decompress_table(self, table: fmt.CompressedBlob) -> np.ndarray:
+        """Host variant of :func:`decompress_table_device`: one dispatch,
+        then one sanctioned device→host materialization."""
+        return transfers.to_host(self.decompress_table_device(table))
 
     def decompress(self, blob: fmt.CompressedBlob) -> np.ndarray:
         """Host convenience: full round trip back to the original ndarray."""
         return fmt.reassemble(blob, self.decompress_table(blob))
+
+    def decompress_device(self, blob: fmt.CompressedBlob,
+                          epilogue=None) -> jnp.ndarray:
+        """Device convenience: full round trip to a device-resident array —
+        decode + reassembly (and any fused epilogue) without a host visit."""
+        return fmt.reassemble_device(
+            blob, self.decompress_table_device(blob, epilogue=epilogue),
+            transformed=epilogue is not None)

@@ -243,3 +243,139 @@ def reassemble(blob: CompressedBlob, chunks_out: np.ndarray) -> np.ndarray:
     """Stitch decoded (num_chunks, chunk_elems) back to the original array."""
     flat = np.ascontiguousarray(chunks_out.reshape(-1)[: blob.total_elems])
     return flat.view(np.dtype(blob.orig_dtype)).reshape(blob.orig_shape)
+
+
+# --------------------------------------------------------------------------
+# Device-side reassembly (the ISSUE-4 tentpole: a decoded blob is born,
+# reassembled, and consumed on device — no host round trip).
+# --------------------------------------------------------------------------
+
+
+def _require_x64(dtype: np.dtype) -> None:
+    import jax
+    if dtype.itemsize == 8 and not jax.config.jax_enable_x64:
+        raise ValueError(
+            f"device-resident reassembly to {dtype} needs 64-bit jax types; "
+            "enable them (jax.experimental.enable_x64() or "
+            "jax_enable_x64=True) or use the host path (reassemble / "
+            "combine_planes)")
+
+
+def device_view(flat, dtype, shape=None):
+    """Device analog of ``flat.view(dtype).reshape(shape)`` — a pure bitcast
+    reinterpretation, jit-compatible.  ``flat`` is a 1-D jax array; widening
+    views (e.g. uint8 bytes -> float32, uint32 pairs -> uint64) regroup
+    ``itemsize_ratio`` consecutive elements per output element."""
+    import jax.numpy as jnp
+    from jax import lax
+    od = np.dtype(dtype)
+    _require_x64(od)
+    cur = np.dtype(flat.dtype)
+    if od == cur:
+        out = flat
+    elif od.itemsize == cur.itemsize:
+        out = lax.bitcast_convert_type(flat, od)
+    elif od.itemsize > cur.itemsize:
+        k = od.itemsize // cur.itemsize
+        if flat.shape[0] % k:
+            raise ValueError(f"{flat.shape[0]} {cur} elements do not view "
+                             f"evenly as {od}")
+        out = lax.bitcast_convert_type(flat.reshape(-1, k), od)
+    else:
+        out = lax.bitcast_convert_type(flat, od).reshape(-1)
+    return out.reshape(shape if shape is not None else (-1,))
+
+
+def reassemble_indices(blob: CompressedBlob) -> Optional[np.ndarray]:
+    """Precomputed gather for device reassembly, or ``None`` when trivial.
+
+    Returns the flat source index per output element — output position ``p``
+    reads ``chunks_out.reshape(-1)[idx[p]]`` — derived from the per-row
+    destination offsets (exclusive cumsum of ``out_lens``).  For the standard
+    layout (every chunk full except a trailing tail, the ``build_blob``
+    invariant) the decode matrix is already contiguous and a reshape+trim
+    suffices, so ``None`` is returned and no index table needs staging.
+    """
+    out_lens = np.asarray(blob.out_lens, np.int64)
+    n = len(out_lens)
+    expect = np.clip(blob.total_elems - np.arange(n) * blob.chunk_elems,
+                     0, blob.chunk_elems)
+    if np.array_equal(out_lens, expect):
+        return None               # contiguous: reshape(-1)[:total] is exact
+    dest = np.concatenate([[0], np.cumsum(out_lens)])   # per-row dest offsets
+    if dest[-1] != blob.total_elems:
+        raise ValueError(f"out_lens sum {dest[-1]} != total {blob.total_elems}")
+    p = np.arange(blob.total_elems, dtype=np.int64)
+    row = np.searchsorted(dest, p, side="right") - 1
+    return (row * blob.chunk_elems + (p - dest[row])).astype(np.int32)
+
+
+def reassemble_rows_device(table, *, row0: int, num_chunks: int,
+                           total_elems: int, orig_dtype: str,
+                           orig_shape: tuple, indices=None,
+                           transformed: bool = False):
+    """Jit-compatible row-range reassembly from a fused group table.
+
+    Slices ``num_chunks`` rows starting at ``row0`` out of the decoded
+    ``(group_chunks, chunk_elems)`` device matrix and stitches them into
+    the blob's original array, all as traced device ops (zero host syncs
+    when called inside jit / with pre-staged ``indices``).
+
+    ``indices``: the precomputed per-row-destination gather from
+    :func:`reassemble_indices`, or None for the contiguous reshape+trim
+    fast path.  ``transformed=True`` marks output of a fused decode
+    epilogue — element values (and dtype) are the epilogue's, so the
+    original-dtype bitcast is skipped and only the trim + reshape applies.
+    """
+    import jax.numpy as jnp
+    from jax import lax
+    rows = lax.slice_in_dim(table, row0, row0 + num_chunks)
+    flat = jnp.reshape(rows, (-1,))
+    if indices is None:
+        flat = lax.slice_in_dim(flat, 0, total_elems)
+    else:
+        flat = flat[indices] if total_elems else flat[:0]
+    if transformed:
+        n = int(np.prod(orig_shape)) if orig_shape else 1
+        return flat.reshape(orig_shape if n == total_elems else (-1,))
+    return device_view(flat, orig_dtype, orig_shape)
+
+
+def reassemble_device(blob: CompressedBlob, chunks_out, *,
+                      indices: Optional[Any] = None,
+                      transformed: bool = False):
+    """Device analog of :func:`reassemble`: stitch the decoded
+    ``(num_chunks, chunk_elems)`` jax matrix back to the original array
+    without leaving the device (jit-compatible; bit-exact vs the host path).
+
+    ``indices``: optional pre-staged gather from :func:`reassemble_indices`
+    (e.g. carried by a ``BatchPlan``); by default it is derived here from
+    the blob's host metadata.
+    """
+    if indices is None:
+        indices = reassemble_indices(blob)
+    return reassemble_rows_device(
+        chunks_out, row0=0, num_chunks=blob.num_chunks,
+        total_elems=blob.total_elems, orig_dtype=blob.orig_dtype,
+        orig_shape=tuple(blob.orig_shape), indices=indices,
+        transformed=transformed)
+
+
+def combine_planes_device(outs: list, orig_dtype: str, orig_shape: tuple):
+    """Device analog of :func:`combine_planes` (jit-compatible).
+
+    Two plane blobs are the lo/hi uint32 halves of an 8-byte dtype; their
+    recombination is a lane interleave + bitcast, which needs 64-bit jax
+    types enabled (a consumer that cannot hold a 64-bit device array has no
+    use for a device-resident one).
+    """
+    import jax.numpy as jnp
+    from jax import lax
+    if len(outs) == 1:
+        return outs[0]
+    _require_x64(np.dtype(orig_dtype))
+    lo, hi = outs
+    pair = jnp.stack([lo.reshape(-1).astype(jnp.uint32),
+                      hi.reshape(-1).astype(jnp.uint32)], axis=-1)
+    u64 = lax.bitcast_convert_type(pair, jnp.uint64)
+    return device_view(u64, orig_dtype, orig_shape)

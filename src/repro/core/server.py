@@ -52,6 +52,7 @@ import numpy as np
 
 from repro.core import format as fmt
 from repro.core import registry
+from repro.core import transfers
 from repro.core.engine import CodagEngine, EngineConfig
 
 _CLOSE = object()          # queue sentinel; nothing is enqueued after it
@@ -164,6 +165,10 @@ class _Request:
     # dispatch path).  None when the cache is off — the worker then dedupes
     # by blob object identity instead of content.
     digest: Optional[str] = None
+    # resolve with a device-resident jax array instead of a host ndarray
+    # (the decoded-blob cache keeps host bytes either way and hands device
+    # requesters a view of them on a hit).
+    device: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -248,18 +253,25 @@ class DecompressionService:
 
     # ------------------------------------------------------------- submit
 
-    def submit(self, blob: fmt.CompressedBlob) -> Future:
-        """Enqueue one blob; returns a Future of the decoded ndarray."""
-        return self.submit_many([blob])[0]
+    def submit(self, blob: fmt.CompressedBlob,
+               device_out: bool = False) -> Future:
+        """Enqueue one blob; returns a Future of the decoded array.
 
-    def submit_many(self, blobs: Sequence[fmt.CompressedBlob]) -> List[Future]:
+        ``device_out=True`` resolves the future with a device-resident jax
+        array: decode + reassembly stay on device, and a cache hit hands
+        out a device view of the cached host bytes."""
+        return self.submit_many([blob], device_out=device_out)[0]
+
+    def submit_many(self, blobs: Sequence[fmt.CompressedBlob],
+                    device_out: bool = False) -> List[Future]:
         """Enqueue blobs ATOMICALLY: they enter the same window together
         (a window may grow past ``max_batch_blobs`` to keep a batch whole)."""
         if not blobs:
             return []
         now = time.perf_counter()
         reqs = [_Request(b, Future(), now,
-                         blob_digest(b) if self._cache is not None else None)
+                         blob_digest(b) if self._cache is not None else None,
+                         device=device_out)
                 for b in blobs]
         with self._lock:
             if self._closed:
@@ -269,13 +281,15 @@ class DecompressionService:
             self._q.put(reqs)
         return [r.future for r in reqs]
 
-    def submit_array(self, ca) -> Future:
+    def submit_array(self, ca, device_out: bool = False) -> Future:
         """Enqueue a ``api.CompressedArray``; the future resolves to the
         recombined logical array (lo/hi planes joined for 8-byte dtypes)."""
-        futs = self.submit_many(list(ca.blobs))
+        futs = self.submit_many(list(ca.blobs), device_out=device_out)
         out: Future = Future()
         pending = [len(futs)]
         lk = threading.Lock()
+        combine = (fmt.combine_planes_device if device_out
+                   else fmt.combine_planes)
 
         def _done(_):
             with lk:
@@ -284,8 +298,7 @@ class DecompressionService:
                     return
             try:
                 outs = [f.result() for f in futs]
-                out.set_result(fmt.combine_planes(
-                    outs, ca.orig_dtype, ca.orig_shape))
+                out.set_result(combine(outs, ca.orig_dtype, ca.orig_shape))
             except BaseException as e:  # propagate any blob failure
                 out.set_exception(e)
 
@@ -293,22 +306,25 @@ class DecompressionService:
             f.add_done_callback(_done)
         return out
 
-    def decode(self, blob: fmt.CompressedBlob) -> np.ndarray:
+    def decode(self, blob: fmt.CompressedBlob, device_out: bool = False):
         """Blocking single-blob convenience."""
-        return self.submit(blob).result()
+        return self.submit(blob, device_out=device_out).result()
 
-    def decode_arrays(self, cas: Sequence) -> List[np.ndarray]:
+    def decode_arrays(self, cas: Sequence,
+                      device_out: bool = False) -> List:
         """Blocking batch decode of ``CompressedArray``s.  All plane blobs of
         all arrays enter one window atomically, so the call costs exactly one
         dispatch per group key (same accounting as ``batch.BatchPlan``)."""
         flat = [b for ca in cas for b in ca.blobs]
-        futs = self.submit_many(flat)
+        futs = self.submit_many(flat, device_out=device_out)
         outs = [f.result() for f in futs]
+        combine = (fmt.combine_planes_device if device_out
+                   else fmt.combine_planes)
         result, i = [], 0
         for ca in cas:
             n = len(ca.blobs)
-            result.append(fmt.combine_planes(
-                outs[i:i + n], ca.orig_dtype, ca.orig_shape))
+            result.append(combine(outs[i:i + n], ca.orig_dtype,
+                                  ca.orig_shape))
             i += n
         return result
 
@@ -415,7 +431,16 @@ class DecompressionService:
     def _process_window(self, window: List[_Request]) -> None:
         """One micro-batch: cache/dedupe pass, then one fused dispatch per
         group key; failures are isolated to the request (bad metadata) or
-        the group (decode error) that caused them."""
+        the group (decode error) that caused them.
+
+        Results are served in the shape each request asked for: host
+        ndarrays, or device-resident jax arrays (``device_out`` submits).
+        The decode itself always stays on device; the host matrix is
+        materialized at most ONCE per group, and only when some requester
+        (or the cache) actually needs host bytes — an all-device window on
+        a cache-less service performs zero device→host transfers."""
+        import jax.numpy as jnp
+
         hits = misses = dispatches = 0
         # group misses by dispatch key; dedupe identical payloads in-window
         # (by content digest with the cache on, by blob identity without)
@@ -432,7 +457,10 @@ class DecompressionService:
                       if self._cache is not None else None)
             if cached is not None:
                 hits += 1
-                self._resolve(req, cached.copy())
+                # cache keeps host bytes; device requesters get a device
+                # view of them (read-only, so no defensive copy needed)
+                self._resolve(req, jnp.asarray(cached) if req.device
+                              else cached.copy())
                 continue
             misses += 1
             groups.setdefault(key, collections.OrderedDict()) \
@@ -440,11 +468,15 @@ class DecompressionService:
 
         for key, by_key in groups.items():
             reps = [reqs[0].blob for reqs in by_key.values()]
+            need_host = self._cache is not None or any(
+                not r.device for reqs in by_key.values() for r in reqs)
             try:
                 merged = fmt.concat_blobs(reps)
                 if self.bucket_shapes:
                     merged = pad_table_to_bucket(merged)
-                table = self.engine.decompress_table(merged)
+                table_dev = self.engine.decompress_table_device(merged)
+                table = (transfers.to_host(table_dev) if need_host
+                         else None)
                 dispatches += 1
             except Exception as e:
                 for reqs in by_key.values():
@@ -454,19 +486,29 @@ class DecompressionService:
             row = 0
             for reqs in by_key.values():
                 blob = reqs[0].blob
-                rows = table[row:row + blob.num_chunks].copy()
-                row += blob.num_chunks
+                row0, row = row, row + blob.num_chunks
+                out = out_dev = None
                 try:
-                    out = fmt.reassemble(blob, rows)
+                    if need_host:
+                        out = fmt.reassemble(blob,
+                                             table[row0:row].copy())
+                    if any(r.device for r in reqs):
+                        out_dev = fmt.reassemble_device(
+                            blob, table_dev[row0:row])
                 except Exception as e:   # bad per-blob metadata fails alone
                     for req in reqs:
                         self._fail(req, e)
                     continue
                 if self._cache is not None and reqs[0].digest is not None:
-                    self._cache.put(reqs[0].digest, out)
-                self._resolve(reqs[0], out)
-                for dup in reqs[1:]:
-                    self._resolve(dup, out.copy())
+                    self._cache.put(reqs[0].digest, out)   # put() copies
+                first_host = True
+                for req in reqs:
+                    if req.device:
+                        # jax arrays are immutable — duplicates share one
+                        self._resolve(req, out_dev)
+                    else:
+                        self._resolve(req, out if first_host else out.copy())
+                        first_host = False
 
         with self._lock:
             self._windows += 1

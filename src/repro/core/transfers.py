@@ -1,0 +1,96 @@
+"""Host-transfer accounting: the device→host funnel + transfer guards.
+
+CODAG's throughput argument is that decompression is gated by *moving the
+uncompressed output*, not by decoding.  A decode path that round-trips
+through the host pays that output-bandwidth tax twice (device→host, then
+host→device at the consumer) plus a blocking sync per materialization.  To
+keep the device-resident paths honest, every intentional device→host
+materialization in this repo goes through ONE funnel — :func:`to_host` —
+so tests and benchmarks can count transfers, and a guard can turn any
+reintroduced host round-trip into a loud failure.
+
+Two layers of enforcement:
+
+* :func:`no_host_transfers` raises on any :func:`to_host` call from the
+  current thread AND enters ``jax.transfer_guard("disallow")``, which on a
+  real accelerator additionally rejects implicit transfers that bypass the
+  funnel (``np.asarray(device_array)``, unstaged operands).  On the CPU
+  backend jax's guard is inert (host == device, transfers are zero-copy),
+  which is exactly why the funnel exists: the CI ``no-host-transfer`` gate
+  stays meaningful on CPU-only runners.
+* :func:`count_host_transfers` counts funnel crossings (from every thread —
+  the DecompressionService materializes on its worker thread) without
+  forbidding them, for benchmarks that report host-round-trip traffic.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Iterator
+
+import jax
+import numpy as np
+
+_tls = threading.local()          # per-thread disallow depth
+_counters: list = []              # active counter dicts (all threads)
+_counters_lock = threading.Lock()
+
+
+def to_host(x) -> np.ndarray:
+    """Materialize a device array on the host (the ONE sanctioned d2h path).
+
+    Raises ``RuntimeError`` when called (on this thread) inside
+    :func:`no_host_transfers`; otherwise records the transfer with every
+    active :func:`count_host_transfers` context and returns a numpy array.
+    """
+    if getattr(_tls, "disallow", 0):
+        raise RuntimeError(
+            "device->host transfer inside no_host_transfers(): a "
+            "device-resident decode path materialized on the host. "
+            "Use device_out=True end to end (reassemble_device / "
+            "combine_planes_device) or move this call outside the guard.")
+    nbytes = int(getattr(x, "nbytes", 0))
+    with _counters_lock:       # snapshot-free: fan-out under the lock (no
+        for c in _counters:    # check-then-act window vs register/remove)
+            c["d2h"] += 1
+            c["bytes"] += nbytes
+    return np.asarray(jax.device_get(x))
+
+
+@contextlib.contextmanager
+def no_host_transfers() -> Iterator[None]:
+    """Forbid host materialization on this thread for the duration.
+
+    Stacks ``jax.transfer_guard("disallow")`` (catches implicit transfers on
+    real accelerators) on top of the :func:`to_host` funnel check (catches
+    explicit materialization even on CPU, where jax's guard cannot).
+    Reentrant; thread-local, so e.g. a DecompressionService worker serving
+    *other* requests is unaffected.
+    """
+    prev = getattr(_tls, "disallow", 0)
+    _tls.disallow = prev + 1
+    try:
+        with jax.transfer_guard("disallow"):
+            yield
+    finally:
+        _tls.disallow = prev
+
+
+@contextlib.contextmanager
+def count_host_transfers() -> Iterator[Dict[str, int]]:
+    """Count :func:`to_host` crossings (all threads) while the context is
+    open.  Yields ``{"d2h": calls, "bytes": total}``; contexts may nest or
+    overlap — each active context sees every crossing."""
+    c = {"d2h": 0, "bytes": 0}
+    with _counters_lock:
+        _counters.append(c)
+    try:
+        yield c
+    finally:
+        # remove by identity: two open contexts may hold equal-valued dicts
+        # (list.remove compares by equality and would drop the wrong one)
+        with _counters_lock:
+            for i, cur in enumerate(_counters):
+                if cur is c:
+                    del _counters[i]
+                    break

@@ -68,39 +68,49 @@ class CompressedTokenStore:
         u = sum(b.uncompressed_bytes for b in self.blobs)
         return c / max(1, u)
 
-    def decoded_shards(self, engine: CodagEngine,
-                       window: int = 1) -> Iterator[np.ndarray]:
+    def decoded_shards(self, engine: CodagEngine, window: int = 1,
+                       device_out: bool = False) -> Iterator[np.ndarray]:
         """Decode shards; ``window`` > 1 coalesces that many shards' chunks
         into one batched dispatch per codec group (CODAG provisioning) while
-        bounding peak host memory to ~window uncompressed shards."""
+        bounding peak host memory to ~window uncompressed shards.
+        ``device_out=True`` yields device-resident int32 jax arrays —
+        decode, reassembly, and the int32 widening never visit the host."""
+        cast = (lambda a: a.astype(jnp.int32)) if device_out \
+            else (lambda a: a.astype(np.int32))
         if window <= 1:
             for b in self.blobs:
-                yield engine.decompress(b).astype(np.int32)
+                yield cast(engine.decompress_device(b) if device_out
+                           else engine.decompress(b))
             return
         for i in range(0, len(self.blobs), window):
             for out in cbatch.decompress_blobs(self.blobs[i:i + window],
-                                               engine):
-                yield out.astype(np.int32)
+                                               engine, device_out=device_out):
+                yield cast(out)
 
     def decoded_shards_async(self, service: DecompressionService,
-                             lookahead: int = 4) -> Iterator[np.ndarray]:
+                             lookahead: int = 4,
+                             device_out: bool = False) -> Iterator[np.ndarray]:
         """Decode shards through a ``DecompressionService``: keep up to
         ``lookahead`` shard requests in flight and yield results in order.
         The service worker overlaps decode of shard i+1..i+lookahead with
         the consumer's use of shard i (and coalesces the in-flight shards
         into fused dispatches), replacing the loader's ad-hoc prefetch
-        thread."""
+        thread.  ``device_out=True`` serves device-resident shards."""
+        cast = (lambda a: a.astype(jnp.int32)) if device_out \
+            else (lambda a: a.astype(np.int32))
         futs: "collections.deque" = collections.deque()
         idx = 0
         while idx < len(self.blobs) and len(futs) < max(1, lookahead):
-            futs.append(service.submit(self.blobs[idx]))
+            futs.append(service.submit(self.blobs[idx],
+                                       device_out=device_out))
             idx += 1
         while futs:
             out = futs.popleft().result()
             if idx < len(self.blobs):
-                futs.append(service.submit(self.blobs[idx]))
+                futs.append(service.submit(self.blobs[idx],
+                                           device_out=device_out))
                 idx += 1
-            yield out.astype(np.int32)
+            yield cast(out)
 
 
 class CompressedLoader:
@@ -117,12 +127,18 @@ class CompressedLoader:
     shard requests in flight (``decoded_shards_async``): the service worker
     owns the decode concurrency, coalesces the in-flight shards into fused
     dispatches, and its decoded-blob cache makes repeat epochs over the same
-    shards dispatch-free."""
+    shards dispatch-free.
+
+    ``device_out``: feed device shards end to end — shards decode to
+    device-resident arrays and the batch slicing / vocab clamp are device
+    ops, so token data crosses host→device once (the compressed upload) and
+    never comes back."""
 
     def __init__(self, store: CompressedTokenStore, batch: int, seq: int,
                  engine: Optional[CodagEngine] = None, prefetch: bool = True,
                  decode_window: int = 4,
-                 service: Optional[DecompressionService] = None):
+                 service: Optional[DecompressionService] = None,
+                 device_out: bool = False):
         self.store = store
         self.batch = batch
         self.seq = seq
@@ -132,19 +148,23 @@ class CompressedLoader:
         # (engine mode) or kept in flight on the service (service mode)
         self.decode_window = decode_window
         self.service = service
+        self.device_out = device_out
 
     def __iter__(self) -> Iterator[Dict[str, jnp.ndarray]]:
         need = self.batch * self.seq + 1
-        buf = np.zeros(0, np.int32)
+        xp = jnp if self.device_out else np
+        buf = xp.zeros(0, xp.int32)
 
         def shard_iter():
             while True:  # loop over shards forever
                 if self.service is not None:
                     yield from self.store.decoded_shards_async(
-                        self.service, lookahead=self.decode_window)
+                        self.service, lookahead=self.decode_window,
+                        device_out=self.device_out)
                 else:
                     yield from self.store.decoded_shards(
-                        self.engine, window=self.decode_window)
+                        self.engine, window=self.decode_window,
+                        device_out=self.device_out)
 
         src = shard_iter()
         if self.prefetch and self.service is None:
@@ -164,7 +184,7 @@ class CompressedLoader:
 
         while True:
             while len(buf) < need:
-                buf = np.concatenate([buf, get()])
+                buf = xp.concatenate([buf, get()])
             flat = buf[:need]
             buf = buf[need - 1:]
             toks = flat[:-1].reshape(self.batch, self.seq) % self.store.vocab

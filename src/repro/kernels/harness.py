@@ -182,6 +182,57 @@ def group_serial_chunk(spec: TwoPhaseSpec, comp: jnp.ndarray, out_len_dyn,
 
 
 # --------------------------------------------------------------------------
+# Epilogue: a consumer transform fused into the decode dispatch
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Epilogue:
+    """Post-decode transform applied to the raw ``(num_chunks, chunk_elems)``
+    matrix INSIDE the decode dispatch (same jit computation — XLA fuses the
+    elementwise tail into the decode kernels, so the intermediate uint matrix
+    is never materialized for consumers that don't want it).
+
+    Hashable and static to the jit cache; array operands ride the device
+    pytree under the caller-chosen ``scale_key`` / ``zero_key`` entries
+    (scalars or anything broadcastable to the chunk matrix).  Application
+    order:
+
+      1. ``view_dtype``  — bitcast reinterpretation, same itemsize
+                           (e.g. the uint8 decode dtype viewed as int8)
+      2. ``out_dtype``   — value cast; with scale/zero set this is also the
+                           compute dtype of the dequant affine (default
+                           float32), i.e. the bit-width widening step
+      3. zero/scale      — ``(x - zero) * scale`` (dequantization)
+      4. ``fn``          — escape hatch: ``fn(out, dev) -> out`` (compared
+                           by identity for jit caching)
+
+    Dtypes are stored as strings so specs hash/compare cleanly.
+    """
+
+    view_dtype: Optional[str] = None
+    out_dtype: Optional[str] = None
+    scale_key: Optional[str] = None
+    zero_key: Optional[str] = None
+    fn: Optional[Callable[..., jnp.ndarray]] = None
+
+    def apply(self, out: jnp.ndarray, dev: Dict[str, Any]) -> jnp.ndarray:
+        if self.view_dtype is not None:
+            out = jax.lax.bitcast_convert_type(out, jnp.dtype(self.view_dtype))
+        if self.scale_key is not None or self.zero_key is not None:
+            out = out.astype(jnp.dtype(self.out_dtype or "float32"))
+            if self.zero_key is not None:
+                out = out - dev[self.zero_key].astype(out.dtype)
+            if self.scale_key is not None:
+                out = out * dev[self.scale_key].astype(out.dtype)
+        elif self.out_dtype is not None:
+            out = out.astype(jnp.dtype(self.out_dtype))
+        if self.fn is not None:
+            out = self.fn(out, dev)
+        return out
+
+
+# --------------------------------------------------------------------------
 # DecodeSpec: the backend-complete decode contract a codec registers
 # --------------------------------------------------------------------------
 
@@ -219,6 +270,9 @@ class DecodeSpec:
     # optional hand-tuned pallas kernel (e.g. bitpack's output-tiled one);
     # everything else rides the generic chunk-per-grid-cell wrapper.
     pallas_override: Optional[Callable[..., jnp.ndarray]] = None
+    # codec-default Epilogue fused into every dispatch unless the caller
+    # passes its own (``ops.decode(..., epilogue=)`` overrides).
+    epilogue: Optional[Epilogue] = None
 
     @classmethod
     def from_two_phase(cls, spec: TwoPhaseSpec,
@@ -245,16 +299,22 @@ class DecodeSpec:
 
 def run(spec: DecodeSpec, dev: Dict[str, Any], *, width: int,
         chunk_elems: int, backend: str, interpret: bool,
-        bits: int) -> jnp.ndarray:
-    """Decode every chunk of a device table through one DecodeSpec backend."""
+        bits: int, epilogue: Optional[Epilogue] = None) -> jnp.ndarray:
+    """Decode every chunk of a device table through one DecodeSpec backend.
+
+    ``epilogue`` (caller's, falling back to the spec's default) is applied
+    to the chunk matrix inside the same computation — fused by XLA into the
+    dispatch, so no raw uint intermediate reaches the consumer."""
     inputs = spec.chunk_inputs(dev)
     consts = tuple(spec.consts())
     out_lens = dev["out_lens"]
+    epilogue = epilogue if epilogue is not None else spec.epilogue
     if backend == "pallas":
         kernel = spec.pallas_override or _generic_pallas
-        return kernel(spec.body, inputs, consts, out_lens,
-                      chunk_elems=chunk_elems, width=width, bits=bits,
-                      interpret=interpret)
+        out = kernel(spec.body, inputs, consts, out_lens,
+                     chunk_elems=chunk_elems, width=width, bits=bits,
+                     interpret=interpret)
+        return epilogue.apply(out, dev) if epilogue is not None else out
     body = {"xla": spec.body,
             "scalar": spec.body_scalar or spec.body,
             "oracle": spec.body_oracle or spec.body}[backend]
@@ -264,7 +324,8 @@ def run(spec: DecodeSpec, dev: Dict[str, Any], *, width: int,
         return body(rows[:n_in], consts, rows[n_in],
                     chunk_elems=chunk_elems, width=width, bits=bits)
 
-    return jax.vmap(one)(*inputs, out_lens)
+    out = jax.vmap(one)(*inputs, out_lens)
+    return epilogue.apply(out, dev) if epilogue is not None else out
 
 
 def _generic_pallas(body: BodyFn, inputs, consts, out_lens, *,

@@ -23,24 +23,26 @@ from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import format as fmt
 from repro.core import registry
+from repro.core import transfers
 from repro.kernels import harness
+from repro.kernels.harness import Epilogue  # noqa: F401  (public alias)
 from repro.kernels.harness import words_view  # noqa: F401  (public alias)
 
 BACKENDS = ("xla", "pallas", "oracle", "scalar")
 
 
 @functools.partial(jax.jit, static_argnames=("codec", "width", "chunk_elems",
-                                             "backend", "interpret", "bits"))
+                                             "backend", "interpret", "bits",
+                                             "epilogue"))
 def _decode_impl(dev: Dict[str, Any], *, codec: str, width: int,
                  chunk_elems: int, backend: str, interpret: bool,
-                 bits: int) -> jax.Array:
+                 bits: int, epilogue) -> jax.Array:
     return harness.run(registry.get(codec).decode, dev, width=width,
                        chunk_elems=chunk_elems, backend=backend,
-                       interpret=interpret, bits=bits)
+                       interpret=interpret, bits=bits, epilogue=epilogue)
 
 
 # Dispatch observers (``count_dispatches``).  A plain list-of-lists instead
@@ -53,19 +55,29 @@ _observers_lock = threading.Lock()
 
 
 def decode(dev: Dict[str, Any], *, codec: str, width: int, chunk_elems: int,
-           backend: str = "xla", interpret: bool = True,
-           bits: int = 0) -> jax.Array:
-    """Decode every chunk. Returns (num_chunks, chunk_elems) device array."""
-    if _observers:
-        rec = {"num_chunks": int(dev["comp"].shape[0]), "codec": codec,
-               "width": width, "chunk_elems": chunk_elems, "backend": backend,
-               "interpret": interpret, "bits": bits}
-        with _observers_lock:
+           backend: str = "xla", interpret: bool = True, bits: int = 0,
+           epilogue=None) -> jax.Array:
+    """Decode every chunk. Returns (num_chunks, chunk_elems) device array.
+
+    ``epilogue``: optional ``harness.Epilogue`` fused into the dispatch
+    (cast / widen / dequant applied before the matrix ever exists for the
+    consumer); overrides the codec's registered default epilogue.
+    """
+    # Observer fan-out happens entirely under the lock: the old pattern
+    # (truthiness check outside, iteration inside) was a TOCTOU — a context
+    # registered between check and fan-out saw a dispatch-count of zero for
+    # a dispatch issued strictly inside it, and one unregistered in that
+    # window could still be appended to after its context closed.
+    with _observers_lock:
+        if _observers:
+            rec = {"num_chunks": int(dev["comp"].shape[0]), "codec": codec,
+                   "width": width, "chunk_elems": chunk_elems,
+                   "backend": backend, "interpret": interpret, "bits": bits}
             for calls in _observers:
                 calls.append(dict(rec))
     return _decode_impl(dev, codec=codec, width=width,
                         chunk_elems=chunk_elems, backend=backend,
-                        interpret=interpret, bits=bits)
+                        interpret=interpret, bits=bits, epilogue=epilogue)
 
 
 @contextlib.contextmanager
@@ -97,24 +109,31 @@ def table_inputs(table: fmt.CompressedBlob):
     return dev, registry.get(table.codec).static_bits(table)
 
 
-def decode_table(table: fmt.CompressedBlob, backend: str = "xla",
-                 interpret: bool = True) -> np.ndarray:
-    """Decode a flat chunk table with ONE dispatch, no reassembly.
+def decode_table_device(table: fmt.CompressedBlob, backend: str = "xla",
+                        interpret: bool = True, epilogue=None) -> jax.Array:
+    """Decode a flat chunk table with ONE dispatch; result stays on device.
 
     ``table`` may be a single blob or a multi-blob merge from
     ``format.concat_blobs`` (the batch scheduler's stream table): every row
     is an independent stream regardless of which blob it came from.  Returns
-    the raw (num_chunks, chunk_elems) matrix in the blob's element dtype;
-    callers that own a blob→row mapping scatter it back themselves.
+    the raw (num_chunks, chunk_elems) device matrix; callers that own a
+    blob→row mapping scatter it back themselves
+    (``format.reassemble_device``).
     """
     dev, bits = table_inputs(table)
-    out = decode(dev, codec=table.codec, width=table.width,
-                 chunk_elems=table.chunk_elems, backend=backend,
-                 interpret=interpret, bits=bits)
-    return np.asarray(out)
+    return decode(dev, codec=table.codec, width=table.width,
+                  chunk_elems=table.chunk_elems, backend=backend,
+                  interpret=interpret, bits=bits, epilogue=epilogue)
+
+
+def decode_table(table: fmt.CompressedBlob, backend: str = "xla",
+                 interpret: bool = True):
+    """Host variant of :func:`decode_table_device`: one dispatch, then one
+    sanctioned device→host materialization (``transfers.to_host``)."""
+    return transfers.to_host(decode_table_device(table, backend, interpret))
 
 
 def decode_blob(blob: fmt.CompressedBlob, backend: str = "xla",
-                interpret: bool = True) -> np.ndarray:
+                interpret: bool = True):
     """Host convenience: decode a CompressedBlob back to the original array."""
     return fmt.reassemble(blob, decode_table(blob, backend, interpret))
