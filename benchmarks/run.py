@@ -16,6 +16,9 @@ Prints ``name,value,derived`` CSV rows:
                          cache hit rate
   device_resident.py  -> host-round-trip vs device-resident decode→consume
                          (transfer counts + throughput)
+  sharded.py          -> single- vs 8-virtual-device mesh decode
+                         (execute_sharded) + per-device dispatch counts
+                         (runs in a forced-device-count subprocess)
 
 ``--all`` additionally writes one ``BENCH_<suite>.json`` per suite (shared
 schema ``{name, config, metrics, timestamp}`` — see
@@ -34,7 +37,7 @@ from pathlib import Path
 def build_suites(args) -> dict:
     """{suite: (config_dict, thunk)} — the thunk returns CSV rows."""
     from benchmarks import (ablations, batched, device_resident, ratios,
-                            roofline_report, serving, throughput)
+                            roofline_report, serving, sharded, throughput)
     size_mb = 0.05 if args.smoke else args.size_mb
     batched_cfg = ({"n_arrays": 8, "kb_per_array": 8, "iters": 1}
                    if args.smoke else
@@ -48,6 +51,11 @@ def build_suites(args) -> dict:
                     "kb_per_blob": max(8, int(args.size_mb * 32))})
     device_cfg = ({"n_layers": 2, "k": 128, "n": 128, "iters": 1}
                   if args.smoke else {"n_layers": 4, "iters": 3})
+    sharded_cfg = ({"n_arrays": 4, "kb_per_array": 8, "iters": 1, "ndev": 8}
+                   if args.smoke else
+                   {"n_arrays": 8,
+                    "kb_per_array": max(16, int(args.size_mb * 64)),
+                    "iters": 3, "ndev": 8})
     return {
         "throughput": ({"size_mb": size_mb},
                        lambda: throughput.run(size_mb)),
@@ -62,6 +70,7 @@ def build_suites(args) -> dict:
         "batched": (batched_cfg, lambda: batched.run(**batched_cfg)),
         "serving": (serving_cfg, lambda: serving.run(**serving_cfg)),
         "device": (device_cfg, lambda: device_resident.run(**device_cfg)),
+        "sharded": (sharded_cfg, lambda: sharded.run(**sharded_cfg)),
     }
 
 
@@ -71,7 +80,7 @@ def main() -> None:
                 help="per-dataset size; 0.25 keeps the full suite ~10 min on CPU")
     ap.add_argument("--only", default=None,
                     help="throughput|ablation_decode|ablation_unit|ratios|"
-                         "roofline|batched|serving|device")
+                         "roofline|batched|serving|device|sharded")
     ap.add_argument("--all", action="store_true",
                     help="write one BENCH_<suite>.json per suite "
                          "(shared schema) into --out-dir")

@@ -1,0 +1,162 @@
+"""Single-device vs mesh-sharded decode throughput + per-device dispatches.
+
+The CODAG claim scaled out: a mesh of D devices is D independent
+decompressors, and the sharded plan executor
+(``core.plan.DecodePlan.execute_sharded``) row-partitions every fused
+group's chunk table across them.  This suite measures, on an
+``ndev``-virtual-CPU-device child process:
+
+  * decode throughput of one staged plan, single device vs the full mesh,
+  * the per-device dispatch counts of a multi-device
+    ``DecompressionService`` window (round-robin group→device assignment).
+
+Virtual CPU devices share the same physical cores, so the throughput
+column is a correctness-shaped smoke number on CI, not a speedup claim —
+the interesting rows are the dispatch-accounting ones.
+
+Because device count must be fixed before jax initializes, the parent
+``run()`` spawns a child with ``XLA_FLAGS=--xla_force_host_platform_
+device_count=<ndev>`` and parses its CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.sharded [--smoke] [--out FILE.json]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _child(n_arrays: int, kb_per_array: int, iters: int, ndev: int) -> list:
+    import time
+
+    import jax
+    import numpy as np
+
+    from repro.core import api, server
+    from repro.core import plan as plan_mod
+    from repro.core.engine import CodagEngine, EngineConfig
+    from repro.launch import mesh as mesh_lib
+
+    assert len(jax.devices()) >= ndev, (len(jax.devices()), ndev)
+    mesh = mesh_lib.make_decode_mesh(ndev)
+    engine = CodagEngine(EngineConfig())
+    rng = np.random.default_rng(0)
+    elems = max(1024, kb_per_array * 1024 // 4)
+    arrays = [np.repeat(rng.integers(0, 90, max(4, elems // 40))
+                        .astype(np.uint32),
+                        rng.integers(1, 80, max(4, elems // 40)))[:elems]
+              for _ in range(n_arrays // 2)]
+    arrays += [rng.integers(0, 127, elems).astype(np.uint32)
+               for _ in range(n_arrays - n_arrays // 2)]
+    codecs = ["rle_v2"] * (n_arrays // 2) + \
+             ["bitpack"] * (n_arrays - n_arrays // 2)
+    cas = api.compress_many(arrays, codecs, chunk_bytes=16 * 1024)
+    blobs = [b for ca in cas for b in ca.blobs]
+    total_bytes = sum(a.nbytes for a in arrays)
+
+    plan = plan_mod.DecodePlan.build(blobs)
+
+    def timeit(fn):
+        for o in fn():                     # warmup (stage + trace)
+            o.block_until_ready()
+        times = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            for o in fn():
+                o.block_until_ready()
+            times.append(time.perf_counter() - t0)
+        return float(np.median(times))
+
+    t_single = timeit(lambda: plan.execute_device(engine))
+    t_sharded = timeit(lambda: plan.execute_sharded(mesh, engine=engine))
+    single = plan.execute_device(engine)
+    sharded = plan.execute_sharded(mesh, engine=engine)
+    for s, m in zip(single, sharded):
+        assert np.array_equal(np.asarray(s), np.asarray(m))
+
+    # per-device dispatch accounting through the multi-device service
+    with server.DecompressionService(engine, devices=jax.devices()[:ndev],
+                                     cache_bytes=0,
+                                     bucket_shapes=False) as svc:
+        for f in svc.submit_many(blobs):
+            f.result(timeout=600)
+        st = svc.stats()
+
+    rows = [
+        ("sharded/ndev", ndev, ""),
+        ("sharded/n_arrays", n_arrays, ""),
+        ("sharded/total_MB", total_bytes / 1e6, ""),
+        ("sharded/groups", plan.num_dispatches, ""),
+        ("sharded/throughput_MBps/single", total_bytes / t_single / 1e6, ""),
+        ("sharded/throughput_MBps/mesh", total_bytes / t_sharded / 1e6,
+         t_single / t_sharded),
+        ("sharded/service/dispatches", st.dispatches, ""),
+        ("sharded/service/devices_used", len(st.device_dispatches),
+         len(st.device_dispatches) / max(1, min(ndev, st.dispatches))),
+    ]
+    rows += [(f"sharded/service/dispatches/{dev}", n, "")
+             for dev, n in sorted(st.device_dispatches.items())]
+    return rows
+
+
+def run(n_arrays: int = 8, kb_per_array: int = 64, iters: int = 3,
+        ndev: int = 8) -> list:
+    """Spawn the fixed-device-count child and parse its CSV rows back."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={ndev}"
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src") + os.pathsep + _ROOT
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.sharded", "--as-child",
+         "--n-arrays", str(n_arrays), "--kb-per-array", str(kb_per_array),
+         "--iters", str(iters), "--ndev", str(ndev)],
+        capture_output=True, text=True, env=env, cwd=_ROOT, timeout=1200)
+    if r.returncode != 0:
+        raise RuntimeError(f"sharded bench child failed:\n{r.stderr[-4000:]}")
+    rows = []
+    for line in r.stdout.splitlines():
+        parts = line.strip().split(",")
+        if len(parts) == 3 and parts[0].startswith("sharded/"):
+            name, value, derived = parts
+            rows.append((name, float(value), derived))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI: finishes in under a minute")
+    ap.add_argument("--as-child", action="store_true",
+                    help=argparse.SUPPRESS)   # internal: run inside the
+    #                                           forced-device-count process
+    ap.add_argument("--n-arrays", type=int, default=8)
+    ap.add_argument("--kb-per-array", type=int, default=64)
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--ndev", type=int, default=8)
+    ap.add_argument("--out", default=None, help="also write a JSON artifact")
+    args = ap.parse_args()
+    if args.smoke:
+        args.n_arrays, args.kb_per_array, args.iters = 4, 8, 1
+
+    if args.as_child:
+        rows = _child(args.n_arrays, args.kb_per_array, args.iters,
+                      args.ndev)
+    else:
+        rows = run(args.n_arrays, args.kb_per_array, args.iters, args.ndev)
+    print("name,value,derived")
+    for name, value, derived in rows:
+        print(f"{name},{value},{derived}")
+
+    if args.out and not args.as_child:
+        from benchmarks.common import write_bench_json
+        cfg = {"n_arrays": args.n_arrays, "kb_per_array": args.kb_per_array,
+               "iters": args.iters, "ndev": args.ndev,
+               "smoke": bool(args.smoke)}
+        print(f"# wrote {write_bench_json(args.out, 'sharded', cfg, rows)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Mesh-sharded compressed restore demo.
+
+A checkpoint saved through the paper's codecs is restored onto a device
+mesh: every compressed leaf's chunk rows decode ACROSS the mesh
+(``DecodePlan.execute_sharded`` — each device is one more independent
+decompressor), and each leaf comes back committed under its requested
+``NamedSharding``, with zero device→host funnel crossings on the decode
+path.
+
+    PYTHONPATH=src python examples/sharded_restore.py
+
+Forces 8 virtual CPU devices (must happen before jax initializes), so it
+runs anywhere.
+"""
+import os
+import tempfile
+
+# must be set before jax initializes; append so existing flags survive
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402  (after the device-count flag)
+import numpy as np  # noqa: E402
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.checkpoint import checkpoint as ckpt  # noqa: E402
+from repro.core import format as fmt, transfers  # noqa: E402
+
+rng = np.random.default_rng(0)
+state = {
+    "embed": rng.normal(size=(512, 128)).astype(np.float32),
+    "w_up": rng.normal(size=(128, 256)).astype(np.float32),
+    "moments_q": rng.integers(-8, 8, (1024, 128)).astype(np.int8),
+}
+nbytes = sum(v.nbytes for v in state.values())
+
+if len(jax.devices()) != 8:   # the flag only applies to the CPU platform
+    raise SystemExit(f"need 8 devices for the (4, 2) demo mesh, have "
+                     f"{len(jax.devices())} — run on CPU or adjust the mesh")
+mesh = Mesh(np.asarray(jax.devices()).reshape(4, 2), ("data", "model"))
+shardings = {
+    "embed": NamedSharding(mesh, P("data", "model")),
+    "w_up": NamedSharding(mesh, P("model", None)),
+    "moments_q": NamedSharding(mesh, P("data", None)),
+}
+
+with tempfile.TemporaryDirectory() as d:
+    ckpt.save(d, 1, state, codec=fmt.RLE_V2)
+    with transfers.count_host_transfers() as c:
+        got = ckpt.restore(d, 1, state, shardings=shardings, device_out=True)
+    for name, leaf in got.items():
+        assert leaf.sharding.is_equivalent_to(shardings[name], leaf.ndim)
+        np.testing.assert_array_equal(np.asarray(leaf), state[name])
+        print(f"{name:12s} {str(leaf.dtype):8s} {str(leaf.shape):12s} "
+              f"born under {leaf.sharding.spec}")
+    print(f"restored {nbytes / 1e6:.1f} MB across {len(jax.devices())} "
+          f"devices with {c['d2h']} device->host crossings")
+print("OK")

@@ -11,7 +11,12 @@ Fails (exit 1) if any registered codec is missing from:
     every backend).
 
 Also validates that every codec's plugin surface is complete enough for
-those matrices to actually exercise it (encode/decode hooks + demo data).
+those matrices to actually exercise it (encode/decode hooks + demo data),
+and that every codec's decode LOWERS THROUGH THE PLAN IR: each
+``ops.decode`` kernel dispatch a round trip issues must originate in
+``core.plan.dispatch`` (equal ``plan.count_lowered`` /
+``ops.count_dispatches`` records) — a codec wired around the unified
+pipeline fails the gate.
 
     PYTHONPATH=src python scripts/check_registry.py
 """
@@ -72,7 +77,14 @@ def main() -> int:
             problems.append(
                 f"{name}: only {n_vec} golden vectors (full matrix expected)")
 
-    # plugin surface completeness + a tiny end-to-end round trip per codec
+    # plugin surface completeness + a tiny end-to-end round trip per codec,
+    # with the plan-lowering gate armed: every kernel dispatch the round
+    # trip issues must have been lowered by core.plan.dispatch.
+    from repro.core import plan as plan_mod
+    from repro.core.engine import CodagEngine, EngineConfig
+    from repro.kernels import ops
+
+    engine = CodagEngine(EngineConfig())
     rng = np.random.default_rng(0)
     for name in sorted(names):
         codec = registry.get(name)
@@ -81,9 +93,18 @@ def main() -> int:
             continue
         arr = codec.demo_data(256, rng)
         ca = api.compress(arr, name, chunk_bytes=512)
-        out = api.decompress(ca)
+        with plan_mod.count_lowered() as lowered, \
+                ops.count_dispatches() as dispatched:
+            out = api.decompress(ca, engine)
         if not np.array_equal(out, arr):
             problems.append(f"{name}: demo round trip is not bit-exact")
+        if not dispatched:
+            problems.append(f"{name}: round trip issued no kernel dispatch")
+        elif len(lowered) != len(dispatched):
+            problems.append(
+                f"{name}: decode bypasses plan lowering "
+                f"({len(dispatched)} ops.decode dispatches, only "
+                f"{len(lowered)} lowered through core.plan.dispatch)")
 
     if problems:
         for p in problems:

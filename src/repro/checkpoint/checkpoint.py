@@ -126,7 +126,14 @@ def restore(ckpt_dir: str, step: int, like, *, shardings=None,
     compressed leaves decode, reassemble, and bitcast to their manifest
     dtype entirely on device (no decode→host→re-upload round trip), and
     uncompressed leaves upload once.  Requires 64-bit jax types for 8-byte
-    leaf dtypes."""
+    leaf dtypes.
+
+    ``shardings`` + ``device_out`` together are the mesh-sharded restore:
+    the batched plan decodes every compressed leaf's chunk rows ACROSS the
+    shardings' mesh (``DecodePlan.execute_sharded`` — each device decodes
+    its share of the fused stream tables; no single-device decode
+    bottleneck, zero ``transfers.to_host`` crossings), and each leaf is
+    committed under its requested ``NamedSharding``."""
     if engine is not None and service is not None:
         raise ValueError("pass engine= OR service=, not both: the service "
                          "decodes on its own engine")
@@ -134,6 +141,10 @@ def restore(ckpt_dir: str, step: int, like, *, shardings=None,
     manifest = json.loads((root / MANIFEST).read_text())
     if service is None and not device_out:
         engine = engine or CodagEngine(EngineConfig())
+    mesh = None
+    if device_out and shardings is not None and service is None:
+        mesh = next((s.mesh for s in jax.tree.leaves(shardings)
+                     if isinstance(s, jax.sharding.NamedSharding)), None)
 
     flat_like, tdef = jax.tree_util.tree_flatten(like)
     keys = list(_flatten(like).keys())
@@ -164,7 +175,8 @@ def restore(ckpt_dir: str, step: int, like, *, shardings=None,
         else:
             decoded.extend(codec_api.decompress_many(comp_cas[j:j + w],
                                                      engine,
-                                                     device_out=device_out))
+                                                     device_out=device_out,
+                                                     mesh=mesh))
     if device_out:
         import jax.numpy as jnp
 

@@ -17,9 +17,9 @@ from typing import List, Optional, Sequence, Union
 
 import numpy as np
 
-from repro.core import batch as batch_mod
 from repro.core import encoders as enc
 from repro.core import format as fmt
+from repro.core import plan as plan_mod
 from repro.core import registry
 from repro.core.engine import CodagEngine, EngineConfig
 
@@ -105,36 +105,49 @@ def compress_many(arrays: Sequence[np.ndarray],
 def decompress_many(cas: Sequence[CompressedArray],
                     engine: Optional[CodagEngine] = None,
                     service=None, *, device_out: bool = False,
-                    epilogue=None,
-                    epilogue_operands=None) -> List:
+                    epilogue=None, epilogue_operands=None,
+                    mesh=None, mesh_axis: Optional[str] = None,
+                    out_shardings=None) -> List:
     """Batched decompress: every chunk of every array in one launch per
     (codec, width, chunk_elems, bits) group — the CODAG provisioning move.
+    All paths lower to one ``core.plan.DecodePlan``.
 
     With no ``engine``, a host-out call routes through the process-wide
     ``server.default_service()`` (or an explicit ``service=``): all blobs
     enter ONE micro-batch window atomically — same one-dispatch-per-group
     accounting as the direct plan, plus the service's decoded-blob cache
     and coalescing with any other concurrently-submitted requests.  Passing
-    an ``engine`` keeps the direct synchronous ``BatchPlan`` path (exact
-    per-call dispatch control, custom engine configs).
+    an ``engine`` keeps the direct synchronous plan path (exact per-call
+    dispatch control, custom engine configs).
 
-    ``device_out=True`` (the ISSUE-4 tentpole) returns device-resident jax
-    arrays — decode, per-blob scatter, 64-bit plane recombination, and the
-    optional fused ``epilogue`` (a ``kernels.harness.Epilogue``: cast /
-    widen / dequant inside the decode dispatch) all happen on device with
-    zero device→host syncs.  An explicit ``service=`` serves device views
-    through its window machinery; otherwise the direct plan path runs
-    (epilogues are plan-path only — a service window mixes tenants that
-    may want different transforms).
+    ``device_out=True`` returns device-resident jax arrays — decode,
+    per-blob scatter, 64-bit plane recombination, and the optional fused
+    ``epilogue`` (a ``kernels.harness.Epilogue``: cast / widen / dequant
+    inside the decode dispatch) all happen on device with zero device→host
+    syncs.  An explicit ``service=`` serves device views through its window
+    machinery; otherwise the direct plan path runs (epilogues are
+    plan-path only — a service window mixes tenants that may want
+    different transforms).
+
+    ``mesh`` (implies device out) decodes every group's chunk rows across
+    the mesh's ``mesh_axis`` devices (``DecodePlan.execute_sharded``) —
+    the multi-device provisioning move; ``out_shardings`` (one sharding or
+    one per array, ``None`` entries allowed) commits each output under the
+    requested ``NamedSharding`` — the plan's *place* stage — so results
+    are born where the consumer wants them.
 
     Bit-exact vs. per-array ``decompress``; outputs follow input order.
     """
     if engine is not None and service is not None:
         raise ValueError("pass engine= OR service=, not both: the service "
                          "decodes on its own engine")
+    device_out = device_out or mesh is not None
     if epilogue is not None and not device_out:
         raise ValueError("epilogue requires device_out=True: a fused "
                          "epilogue's output has no host reassembly path")
+    if out_shardings is not None and not device_out:
+        raise ValueError("out_shardings requires device_out=True (or "
+                         "mesh=): host arrays have no device placement")
     if not cas:
         return []
     if service is not None or (engine is None and not device_out):
@@ -142,6 +155,10 @@ def decompress_many(cas: Sequence[CompressedArray],
             raise ValueError("epilogue is not supported on the service "
                              "path; pass engine= (or no engine) with "
                              "device_out=True")
+        if mesh is not None or out_shardings is not None:
+            raise ValueError("mesh/out_shardings are not supported on the "
+                             "service path; pass engine= (or no engine) "
+                             "for the direct plan executors")
         if service is None:
             from repro.core import server as server_mod
             service = server_mod.default_service()
@@ -151,11 +168,32 @@ def decompress_many(cas: Sequence[CompressedArray],
     for ca in cas:
         spans.append((len(flat), len(ca.blobs)))
         flat.extend(ca.blobs)
+    per_array = (plan_mod.as_shard_list(out_shardings, len(cas),
+                                        what="arrays")
+                 or [None] * len(cas))
     if device_out:
-        plan = batch_mod.BatchPlan.build(flat)
-        outs = plan.execute_device(engine, epilogue=epilogue,
-                                   epilogue_operands=epilogue_operands)
-        return [_combine_device(ca, outs[s:s + n], epilogue is not None)
-                for ca, (s, n) in zip(cas, spans)]
-    outs = batch_mod.decompress_blobs(flat, engine)
+        plan = plan_mod.DecodePlan.build(flat)
+        # single-blob arrays place inside the plan (born under their
+        # sharding); plane-decomposed arrays place after recombination.
+        blob_sh: List = [None] * len(flat)
+        for (s, n), sh in zip(spans, per_array):
+            if sh is not None and n == 1:
+                blob_sh[s] = sh
+        if mesh is not None:
+            outs = plan.execute_sharded(
+                mesh, axis=mesh_axis, engine=engine, epilogue=epilogue,
+                epilogue_operands=epilogue_operands, out_shardings=blob_sh)
+        else:
+            outs = plan.execute_device(
+                engine, epilogue=epilogue,
+                epilogue_operands=epilogue_operands, out_shardings=blob_sh)
+        results = []
+        for ca, (s, n), sh in zip(cas, spans, per_array):
+            out = _combine_device(ca, outs[s:s + n], epilogue is not None)
+            if sh is not None and n > 1 and plan_mod.placeable(out.shape, sh):
+                import jax
+                out = jax.device_put(out, sh)
+            results.append(out)
+        return results
+    outs = plan_mod.decompress_blobs(flat, engine)
     return [_combine(ca, outs[s:s + n]) for ca, (s, n) in zip(cas, spans)]

@@ -1,234 +1,26 @@
-"""Multi-blob batched decompression scheduler.
+"""Multi-blob batched decompression scheduler — compat surface.
 
-CODAG's throughput story is about *provisioning*: the hardware scheduler
-hides decode latency only when a launch carries many independent streams.
-Decoding N small ``CompressedBlob``s one dispatch at a time reproduces the
-few-streams pathology of the RAPIDS baseline (paper Fig. 1a) — each launch
-is under-provisioned and the scheduler starves.
-
-This module coalesces a heterogeneous list of blobs (mixed codecs, widths,
-chunk geometries) into per-``(codec, width, chunk_elems, bits)`` groups,
-concatenates each group's chunk tables into ONE flat stream table
-(``format.concat_blobs``), and issues a single engine dispatch per group.
-Every chunk of every blob becomes an independent stream in one launch;
-results are scattered back to per-blob outputs by row ranges.
+The scheduler's machinery (grouping, staging, scatter, the jitted
+decode→scatter executors) lives in :mod:`repro.core.plan` as the unified
+``DecodePlan`` IR; this module keeps the original public names working:
 
     from repro.core import batch
     outs = batch.decompress_blobs(blobs)          # len(outs) == len(blobs)
 
-or, with an inspectable plan (dispatch accounting for benchmarks/tests):
-
-    plan = batch.BatchPlan.build(blobs)
+    plan = batch.BatchPlan.build(blobs)           # == plan.DecodePlan.build
     assert plan.num_dispatches == <number of distinct group keys>
     outs = plan.execute(engine)                   # host ndarrays
     devs = plan.execute_device(engine)            # device arrays, zero d2h
-
-The device path is the ISSUE-4 tentpole: each ``GroupPlan`` carries the
-per-blob scatter (``format.reassemble_indices``) precomputed at build time,
-``stage()`` uploads the fused tables (and any index tables) ONCE, and
-``execute_device`` runs decode → scatter → (optional fused epilogue) with
-zero host syncs — wrap it in ``transfers.no_host_transfers()`` to prove it.
+    shrd = plan.execute_sharded(mesh)             # mesh-sharded decode
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from repro.core import plan as _plan
 
-import numpy as np
+DecodePlan = _plan.DecodePlan
+PlanGroup = _plan.PlanGroup
+decompress_blobs = _plan.decompress_blobs
 
-from repro.core import format as fmt
-from repro.core.engine import CodagEngine, EngineConfig
-
-
-@functools.lru_cache(maxsize=None)
-def _decode_scatter_fn():
-    """The jitted decode→scatter kernel for one fused group (lazy so this
-    module stays importable without jax initialization).
-
-    One jit computation per (engine config, group statics, per-blob layout
-    meta): the fused decode dispatch, every blob's row-range scatter, and
-    the optional epilogue all trace together — executing the compiled
-    function with pre-staged inputs performs zero host transfers in either
-    direction, which is what lets ``execute_device`` run under
-    ``transfers.no_host_transfers()``.
-    """
-    import jax
-
-    @functools.partial(jax.jit, static_argnames=(
-        "cfg", "codec", "width", "chunk_elems", "bits", "epilogue", "meta"))
-    def decode_scatter(dev, scatter, *, cfg, codec, width, chunk_elems,
-                       bits, epilogue, meta):
-        table = CodagEngine(cfg).decompress_chunks(
-            dev, codec=codec, width=width, chunk_elems=chunk_elems,
-            bits=bits, epilogue=epilogue)
-        outs = []
-        for (row0, nc, total, odt, oshape, transformed), idx in zip(
-                meta, scatter):
-            outs.append(fmt.reassemble_rows_device(
-                table, row0=row0, num_chunks=nc, total_elems=total,
-                orig_dtype=odt, orig_shape=oshape, indices=idx,
-                transformed=transformed))
-        return outs
-
-    return decode_scatter
-
-
-@dataclasses.dataclass(frozen=True)
-class GroupPlan:
-    """One fused dispatch: the merged chunk table for one group key."""
-
-    key: tuple                    # (codec, width, chunk_elems, bits)
-    blob_ids: Tuple[int, ...]     # positions in the input blob list
-    row_offsets: Tuple[int, ...]  # first chunk row of each blob in `merged`
-    merged: fmt.CompressedBlob
-    # per-blob device scatter (aligned with blob_ids): the precomputed flat
-    # gather from format.reassemble_indices, or None when the blob's rows
-    # are contiguous and reshape+trim suffices (the standard layout).
-    scatter: Tuple[Optional[np.ndarray], ...] = ()
-
-    @property
-    def num_chunks(self) -> int:
-        return self.merged.num_chunks
-
-
-@dataclasses.dataclass
-class BatchPlan:
-    """Grouping of an input blob list into per-key fused dispatches."""
-
-    blobs: List[fmt.CompressedBlob]
-    groups: List[GroupPlan]
-    # staged device inputs, lazily filled by stage(): group index ->
-    # (device pytree, static bits); plus staged per-blob scatter indices.
-    _staged: Dict[int, tuple] = dataclasses.field(
-        default_factory=dict, repr=False, compare=False)
-    _staged_scatter: Dict[int, Any] = dataclasses.field(
-        default_factory=dict, repr=False, compare=False)
-    # single-slot epilogue-operand cache: (original operands dict, staged
-    # jnp dict).  Keyed by object identity — the strong ref to the original
-    # keeps its id from being reused, so repeat calls with the same operand
-    # dict are transfer-free.
-    _staged_ops: Optional[tuple] = dataclasses.field(
-        default=None, repr=False, compare=False)
-
-    @classmethod
-    def build(cls, blobs: Sequence[fmt.CompressedBlob]) -> "BatchPlan":
-        blobs = list(blobs)
-        by_key: Dict[tuple, List[int]] = {}
-        for i, b in enumerate(blobs):
-            by_key.setdefault(fmt.group_key(b), []).append(i)
-        groups = []
-        for key, ids in by_key.items():   # insertion order = first occurrence
-            offsets, row = [], 0
-            for i in ids:
-                offsets.append(row)
-                row += blobs[i].num_chunks
-            groups.append(GroupPlan(
-                key=key, blob_ids=tuple(ids), row_offsets=tuple(offsets),
-                merged=fmt.concat_blobs([blobs[i] for i in ids]),
-                scatter=tuple(fmt.reassemble_indices(blobs[i]) for i in ids)))
-        return cls(blobs=blobs, groups=groups)
-
-    @property
-    def num_dispatches(self) -> int:
-        return len(self.groups)
-
-    @property
-    def num_chunks(self) -> int:
-        return sum(g.num_chunks for g in self.groups)
-
-    def stage(self) -> "BatchPlan":
-        """Upload every group's fused table (and any scatter index tables)
-        to the device, once.  After staging, ``execute_device`` performs no
-        host→device transfers — the decode→consume path can run under
-        ``transfers.no_host_transfers()``."""
-        import jax.numpy as jnp
-
-        from repro.kernels import ops
-        for gi, g in enumerate(self.groups):
-            if gi not in self._staged:
-                self._staged[gi] = ops.table_inputs(g.merged)
-            if gi not in self._staged_scatter:
-                self._staged_scatter[gi] = tuple(
-                    None if s is None else jnp.asarray(s) for s in g.scatter)
-        return self
-
-    def execute(self, engine: Optional[CodagEngine] = None) -> List[np.ndarray]:
-        """Run one engine dispatch per group; scatter back to input order."""
-        engine = engine or CodagEngine(EngineConfig())
-        outs: List[Optional[np.ndarray]] = [None] * len(self.blobs)
-        for g in self.groups:
-            table = engine.decompress_table(g.merged)
-            for bid, row0 in zip(g.blob_ids, g.row_offsets):
-                blob = self.blobs[bid]
-                # copy: reassemble() of a contiguous slice is a view into the
-                # whole group table — returning it would pin that table for
-                # as long as any single output lives.
-                rows = table[row0:row0 + blob.num_chunks].copy()
-                outs[bid] = fmt.reassemble(blob, rows)
-        return outs  # type: ignore[return-value]
-
-    def execute_device(self, engine: Optional[CodagEngine] = None, *,
-                       epilogue=None,
-                       epilogue_operands: Optional[Dict[str, Any]] = None,
-                       ) -> List[Any]:
-        """Device-resident execute: one dispatch per group, per-blob scatter
-        and the optional fused ``epilogue`` all on device.  Returns jax
-        arrays in input order; with the plan pre-``stage()``d there are zero
-        host transfers in either direction.
-
-        ``epilogue_operands``: arrays for the epilogue's ``scale_key`` /
-        ``zero_key`` device-pytree entries.  Staged on first use and cached
-        by dict identity, so repeat calls with the same operands dict (the
-        steady-state consumer pattern) perform no host→device transfer."""
-        engine = engine or CodagEngine(EngineConfig())
-        self.stage()
-        ops_extra = {}
-        if epilogue_operands:
-            import jax.numpy as jnp
-            if (self._staged_ops is not None
-                    and self._staged_ops[0] is epilogue_operands):
-                ops_extra = self._staged_ops[1]
-            else:
-                ops_extra = {k: jnp.asarray(v)
-                             for k, v in epilogue_operands.items()}
-                self._staged_ops = (epilogue_operands, ops_extra)
-        outs: List[Any] = [None] * len(self.blobs)
-        decode_scatter = _decode_scatter_fn()
-        for gi, g in enumerate(self.groups):
-            dev, bits = self._staged[gi]
-            if ops_extra:
-                dev = {**dev, **ops_extra}
-            codec, width, chunk_elems, _ = g.key
-            meta = tuple(
-                (row0, self.blobs[bid].num_chunks,
-                 self.blobs[bid].total_elems, self.blobs[bid].orig_dtype,
-                 tuple(self.blobs[bid].orig_shape), epilogue is not None)
-                for bid, row0 in zip(g.blob_ids, g.row_offsets))
-            group_outs = decode_scatter(
-                dev, list(self._staged_scatter[gi]), cfg=engine.config,
-                codec=codec, width=width, chunk_elems=chunk_elems,
-                bits=bits, epilogue=epilogue, meta=meta)
-            for bid, out in zip(g.blob_ids, group_outs):
-                outs[bid] = out
-        return outs
-
-
-def decompress_blobs(blobs: Sequence[fmt.CompressedBlob],
-                     engine: Optional[CodagEngine] = None,
-                     device_out: bool = False,
-                     epilogue=None) -> List:
-    """Batched ``engine.decompress`` over many blobs: one dispatch per
-    (codec, width, chunk_elems, bits) group, outputs in input order.
-    ``device_out=True`` keeps every output on device (jax arrays, no host
-    sync); ``epilogue`` fuses a consumer transform into each dispatch
-    (device path only)."""
-    if not blobs:
-        return []
-    plan = BatchPlan.build(blobs)
-    if device_out:
-        return plan.execute_device(engine, epilogue=epilogue)
-    if epilogue is not None:
-        raise ValueError("epilogue requires device_out=True: a fused "
-                         "epilogue's output has no host reassembly path")
-    return plan.execute(engine)
+# historical names (PR 1/PR 4 era)
+BatchPlan = _plan.DecodePlan
+GroupPlan = _plan.PlanGroup

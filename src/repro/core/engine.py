@@ -18,17 +18,23 @@ exposes that axis directly:
 
   backend="pallas"  the TPU kernels (interpret=True on CPU);
   backend="xla"     same decode bodies compiled by XLA (production CPU path).
+
+The engine is a *configuration* wrapper: every decode it issues lowers
+through the unified plan IR (``core.plan.dispatch`` is the one
+``ops.decode`` site; the convenience round trips build one-blob
+``DecodePlan``s), so the engine, the batch scheduler, the public API, and
+the serving loop all execute the same pipeline.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Any, Dict
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import format as fmt
+from repro.core import plan as plan_mod
 from repro.core import transfers
 from repro.kernels import ops
 
@@ -46,61 +52,19 @@ class CodagEngine:
     def __init__(self, config: EngineConfig = EngineConfig()):
         self.config = config
 
-    def _backend(self) -> str:
-        c = self.config
-        if not c.all_thread:
-            return "scalar"
-        return c.backend
-
     def decompress_chunks(self, dev: Dict[str, Any], *, codec: str,
                           width: int, chunk_elems: int,
                           bits: int = 0, epilogue=None) -> jnp.ndarray:
         """Decode to (num_chunks, chunk_elems); jit-compatible.
 
+        Lowers straight to the plan IR's dispatch stage (the repo's one
+        ``ops.decode`` call site) under this engine's provisioning config.
         ``epilogue``: optional ``kernels.harness.Epilogue`` fused into the
         dispatch (cast/widen/dequant before the matrix reaches a consumer).
         """
-        c = self.config
-        backend = self._backend()
-        if c.unit == "warp":
-            return ops.decode(dev, codec=codec, width=width,
-                              chunk_elems=chunk_elems, backend=backend,
-                              interpret=c.interpret, bits=bits,
-                              epilogue=epilogue)
-        # "block": fixed pool of n_units streams; serial over chunk batches.
-        n_chunks = dev["comp"].shape[0]
-        nu = min(c.n_units, n_chunks)
-        n_serial = (n_chunks + nu - 1) // nu
-        pad = n_serial * nu - n_chunks
-
-        def pad0(x):
-            # shared tables (e.g. bitpack bits) and scalar epilogue
-            # operands replicate across serial batches unchanged
-            if x.ndim == 0 or x.shape[0] != n_chunks:
-                return x
-            return jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1))
-
-        devp = {k: pad0(v) for k, v in dev.items()}
-        # out_lens of padding rows are 0 -> decode loops exit immediately.
-        # Only per-chunk tables are scanned over; shared tables / scalar
-        # epilogue operands have no n_chunks leading dim and must replicate
-        # to every serial batch via closure (lax.scan requires every
-        # scanned leaf to share the leading dim).
-        scanned = {k: v.reshape((n_serial, nu) + v.shape[1:])
-                   for k, v in devp.items()
-                   if v.ndim and v.shape[0] == n_serial * nu}
-        shared = {k: v for k, v in devp.items() if k not in scanned}
-
-        def step(carry, batch):
-            out = ops.decode({**batch, **shared}, codec=codec, width=width,
-                             chunk_elems=chunk_elems, backend=backend,
-                             interpret=c.interpret, bits=bits,
-                             epilogue=epilogue)
-            return carry, out
-
-        _, outs = jax.lax.scan(step, 0, scanned)
-        out = outs.reshape((n_serial * nu, chunk_elems))
-        return out[:n_chunks]
+        return plan_mod.dispatch(dev, config=self.config, codec=codec,
+                                 width=width, chunk_elems=chunk_elems,
+                                 bits=bits, epilogue=epilogue)
 
     def decompress_table_device(self, table: fmt.CompressedBlob,
                                 epilogue=None) -> jnp.ndarray:
@@ -121,13 +85,14 @@ class CodagEngine:
         return transfers.to_host(self.decompress_table_device(table))
 
     def decompress(self, blob: fmt.CompressedBlob) -> np.ndarray:
-        """Host convenience: full round trip back to the original ndarray."""
-        return fmt.reassemble(blob, self.decompress_table(blob))
+        """Host convenience: full round trip back to the original ndarray
+        (a one-blob DecodePlan, executed on the host path)."""
+        return plan_mod.DecodePlan.build([blob]).execute(self)[0]
 
     def decompress_device(self, blob: fmt.CompressedBlob,
                           epilogue=None) -> jnp.ndarray:
         """Device convenience: full round trip to a device-resident array —
-        decode + reassembly (and any fused epilogue) without a host visit."""
-        return fmt.reassemble_device(
-            blob, self.decompress_table_device(blob, epilogue=epilogue),
-            transformed=epilogue is not None)
+        a one-blob DecodePlan on the device path (decode + reassembly and
+        any fused epilogue, no host visit)."""
+        return plan_mod.DecodePlan.build([blob]).execute_device(
+            self, epilogue=epilogue)[0]

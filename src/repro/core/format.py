@@ -13,6 +13,7 @@ uint8 matrix plus per-chunk length vectors — so a Pallas grid cell (the
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Any, Dict, Optional
 
 import numpy as np
@@ -174,6 +175,89 @@ def concat_blobs(blobs: list["CompressedBlob"]) -> "CompressedBlob":
         out_lens=np.concatenate([b.out_lens for b in blobs]).astype(np.int32),
         extras=extras,
     )
+
+
+def pad_table_rows(table: "CompressedBlob", target_rows: int) -> "CompressedBlob":
+    """Pad a chunk table to ``target_rows`` with zero-length trailing chunks.
+
+    Padding rows have ``comp_lens == out_lens == 0`` — every decode body
+    exits immediately on them, the same convention the engine's block mode
+    relies on — and sit at the END of the table so callers' row-range
+    scatter is unaffected.  Used by the service's pow2 shape bucketing and
+    by the sharded executor's per-device uniform padding (every device of a
+    mesh axis must decode the same local row count).
+    """
+    rows = table.num_chunks
+    if target_rows < rows:
+        raise ValueError(f"cannot pad {rows} rows down to {target_rows}")
+    if target_rows == rows:
+        return table
+    pad = target_rows - rows
+    comp = np.zeros((target_rows, table.comp.shape[1]), np.uint8)
+    comp[:rows] = table.comp
+    shared = registry.get(table.codec).shared_extras
+    extras = {}
+    for k, v in table.extras.items():
+        if k in shared or v.shape[:1] != (rows,):
+            extras[k] = v                    # group-wide scalar/table
+        else:                                # per-chunk rows: pad with zeros
+            extras[k] = np.concatenate(
+                [v, np.zeros((pad,) + v.shape[1:], v.dtype)], axis=0)
+    return dataclasses.replace(
+        table, comp=comp,
+        comp_lens=np.concatenate(
+            [table.comp_lens, np.zeros(pad, np.int32)]).astype(np.int32),
+        out_lens=np.concatenate(
+            [table.out_lens, np.zeros(pad, np.int32)]).astype(np.int32),
+        extras=extras)
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, n - 1).bit_length() if n > 1 else 1
+
+
+def pad_table_to_bucket(table: "CompressedBlob") -> "CompressedBlob":
+    """Pad a merged chunk table to power-of-two row/column buckets.
+
+    Every micro-batch window fuses a different set of blobs, so the merged
+    table's ``(num_chunks, max_comp_bytes)`` shape is fresh almost every
+    window — and each fresh shape is a new XLA compile.  Padding rows with
+    zero-length chunks (:func:`pad_table_rows`) and columns with zero bytes
+    buckets the jit cache by ``(group key, pow2 rows, pow2 cols)``: after a
+    handful of windows the steady state is compile-free.
+    """
+    padded = pad_table_rows(table, _next_pow2(table.num_chunks))
+    cols = int(padded.comp.shape[1])
+    target_cols = max(128, _next_pow2(cols))
+    if target_cols == cols:
+        return padded
+    comp = np.zeros((padded.num_chunks, target_cols), np.uint8)
+    comp[:, :cols] = padded.comp
+    return dataclasses.replace(padded, comp=comp)
+
+
+def blob_digest(blob: "CompressedBlob") -> str:
+    """Content hash of a compressed blob — equal digests decode identically.
+
+    Covers everything the decode output depends on: codec + static decode
+    metadata, the dense comp matrix (padding is all-zeros by construction,
+    so it is deterministic), the length vectors, and every extras table.
+    Used as the service cache key, the plan executor's staging cache key,
+    and by the golden-vector conformance suite as the committed encoder
+    fingerprint.
+    """
+    h = hashlib.blake2b(digest_size=16)
+    h.update(f"{blob.codec}|{blob.width}|{blob.chunk_elems}|"
+             f"{blob.total_elems}|{blob.orig_dtype}|{blob.orig_shape}"
+             .encode())
+    h.update(np.ascontiguousarray(blob.comp_lens, np.int64).tobytes())
+    h.update(np.ascontiguousarray(blob.out_lens, np.int64).tobytes())
+    h.update(np.ascontiguousarray(blob.comp).tobytes())
+    for k in sorted(blob.extras):
+        v = np.ascontiguousarray(blob.extras[k])
+        h.update(f"|{k}|{v.dtype}|{v.shape}|".encode())
+        h.update(v.tobytes())
+    return h.hexdigest()
 
 
 def combine_planes(outs: list, orig_dtype: str, orig_shape: tuple) -> np.ndarray:

@@ -41,7 +41,6 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-import hashlib
 import queue
 import threading
 import time
@@ -51,77 +50,16 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core import format as fmt
-from repro.core import registry
+from repro.core import plan as plan_mod
 from repro.core import transfers
 from repro.core.engine import CodagEngine, EngineConfig
 
 _CLOSE = object()          # queue sentinel; nothing is enqueued after it
 
-
-def _next_pow2(n: int) -> int:
-    return 1 << max(0, n - 1).bit_length() if n > 1 else 1
-
-
-def pad_table_to_bucket(table: fmt.CompressedBlob) -> fmt.CompressedBlob:
-    """Pad a merged chunk table to power-of-two row/column buckets.
-
-    Every micro-batch window fuses a different set of blobs, so the merged
-    table's ``(num_chunks, max_comp_bytes)`` shape is fresh almost every
-    window — and each fresh shape is a new XLA compile.  Padding rows with
-    zero-length chunks (``comp_lens == out_lens == 0``: every decode body
-    exits immediately, the same convention the engine's block mode relies
-    on) and columns with zero bytes buckets the jit cache by
-    ``(group key, pow2 rows, pow2 cols)``: after a handful of windows the
-    steady state is compile-free.  Padding rows sit at the END of the
-    table, so callers' row-range scatter is unaffected.
-    """
-    rows = table.num_chunks
-    cols = int(table.comp.shape[1])
-    target_rows = _next_pow2(rows)
-    target_cols = max(128, _next_pow2(cols))
-    if target_rows == rows and target_cols == cols:
-        return table
-    comp = np.zeros((target_rows, target_cols), np.uint8)
-    comp[:rows, :cols] = table.comp
-    pad = target_rows - rows
-    shared = registry.get(table.codec).shared_extras
-    extras = {}
-    for k, v in table.extras.items():
-        if k in shared or v.shape[:1] != (rows,):
-            extras[k] = v                    # group-wide scalar/table
-        else:                                # per-chunk rows: pad with zeros
-            extras[k] = np.concatenate(
-                [v, np.zeros((pad,) + v.shape[1:], v.dtype)], axis=0)
-    return dataclasses.replace(
-        table, comp=comp,
-        comp_lens=np.concatenate(
-            [table.comp_lens, np.zeros(pad, np.int32)]).astype(np.int32),
-        out_lens=np.concatenate(
-            [table.out_lens, np.zeros(pad, np.int32)]).astype(np.int32),
-        extras=extras)
-
-
-def blob_digest(blob: fmt.CompressedBlob) -> str:
-    """Content hash of a compressed blob — equal digests decode identically.
-
-    Covers everything the decode output depends on: codec + static decode
-    metadata, the dense comp matrix (padding is all-zeros by construction,
-    so it is deterministic), the length vectors, and every extras table.
-    Used as the service cache key and by the golden-vector conformance
-    suite as the committed encoder fingerprint.
-    """
-    h = hashlib.blake2b(digest_size=16)
-    h.update(f"{blob.codec}|{blob.width}|{blob.chunk_elems}|"
-             f"{blob.total_elems}|{blob.orig_dtype}|{blob.orig_shape}"
-             .encode())
-    h.update(np.ascontiguousarray(blob.comp_lens, np.int64).tobytes())
-    h.update(np.ascontiguousarray(blob.out_lens, np.int64).tobytes())
-    h.update(np.ascontiguousarray(blob.comp).tobytes())
-    for k in sorted(blob.extras):
-        v = np.ascontiguousarray(blob.extras[k])
-        h.update(f"|{k}|{v.dtype}|{v.shape}|".encode())
-        h.update(v.tobytes())
-    return h.hexdigest()
+# Moved to core/format.py (the plan executor's staging caches need them
+# too); re-exported here for compatibility — same objects, one definition.
+blob_digest = fmt.blob_digest
+pad_table_to_bucket = fmt.pad_table_to_bucket
 
 
 class _LRUCache:
@@ -187,6 +125,11 @@ class ServiceStats:
     cache_hit_rate: float
     latency_p50_ms: float
     latency_p99_ms: float
+    # per-device dispatch accounting (multi-device services only): device
+    # string -> fused dispatches scheduled onto it by the round-robin
+    # group→device assignment.  Empty for single-device services.
+    device_dispatches: Dict[str, int] = dataclasses.field(
+        default_factory=dict)
 
     @property
     def dispatch_amplification(self) -> float:
@@ -217,6 +160,12 @@ class DecompressionService:
                       dispatch geometry (the default service disables both
                       this and the cache, for ``decompress_many``'s
                       one-shot batches).
+    devices:          optional list of ``jax.Device``s — each window's
+                      fused group dispatches are assigned round-robin
+                      across them (group i → device (rr+i) mod N), with
+                      per-device dispatch counts in ``ServiceStats``.  A
+                      mesh of decompressors behind one submit queue; None
+                      keeps the single default device.
     latency_window:   how many recent request latencies feed p50/p99.
     """
 
@@ -225,6 +174,7 @@ class DecompressionService:
                  idle_ms: Optional[float] = None,
                  cache_bytes: int = 32 << 20,
                  bucket_shapes: bool = True,
+                 devices: Optional[Sequence] = None,
                  latency_window: int = 4096):
         if max_batch_blobs < 1:
             raise ValueError("max_batch_blobs must be >= 1")
@@ -240,6 +190,9 @@ class DecompressionService:
         self._cache = _LRUCache(cache_bytes) if cache_bytes > 0 else None
         self._latencies: "collections.deque[float]" = collections.deque(
             maxlen=latency_window)
+        self._devices = list(devices) if devices else []
+        self._rr = 0                       # round-robin device cursor
+        self._device_dispatches: Dict[str, int] = {}
         self._windows = 0
         self._blobs = 0
         self._dispatches = 0
@@ -363,6 +316,7 @@ class DecompressionService:
             hits, misses = self._cache_hits, self._cache_misses
             errors = self._errors
             cache_bytes = self._cache.bytes if self._cache else 0
+            device_dispatches = dict(self._device_dispatches)
 
         def pct(p: float) -> float:
             if not lats:
@@ -376,7 +330,8 @@ class DecompressionService:
             blobs_per_window=blobs / max(1, windows),
             dispatches_per_window=dispatches / max(1, windows),
             cache_hit_rate=hits / max(1, hits + misses),
-            latency_p50_ms=pct(0.50), latency_p99_ms=pct(0.99))
+            latency_p50_ms=pct(0.50), latency_p99_ms=pct(0.99),
+            device_dispatches=device_dispatches)
 
     # -------------------------------------------------------------- worker
 
@@ -429,9 +384,19 @@ class DecompressionService:
             pass
 
     def _process_window(self, window: List[_Request]) -> None:
-        """One micro-batch: cache/dedupe pass, then one fused dispatch per
-        group key; failures are isolated to the request (bad metadata) or
-        the group (decode error) that caused them.
+        """One micro-batch: cache/dedupe pass, then one ``DecodePlan`` per
+        group key — the same parse/group → stage → dispatch → reassemble
+        pipeline every other entry path runs (``core.plan``), with the
+        service's bucketing applied at plan build.  Building per group
+        (rather than one window-wide plan) keeps failures isolated to the
+        request (bad metadata) or the group (unlowerable blobs, decode
+        error) that caused them.
+
+        With ``devices`` configured, the plan's fused group dispatches are
+        assigned round-robin across them — per-window multi-device
+        scheduling; each group's table is staged on and decoded by its
+        assigned device, and per-device dispatch counts land in
+        ``ServiceStats.device_dispatches``.
 
         Results are served in the shape each request asked for: host
         ndarrays, or device-resident jax arrays (``device_out`` submits).
@@ -442,12 +407,15 @@ class DecompressionService:
         import jax.numpy as jnp
 
         hits = misses = dispatches = 0
-        # group misses by dispatch key; dedupe identical payloads in-window
-        # (by content digest with the cache on, by blob identity without)
-        groups: "Dict[tuple, collections.OrderedDict]" = {}
+        device_dispatches: Dict[str, int] = {}
+        # dedupe identical payloads in-window (by content digest with the
+        # cache on, by blob identity without); order is preserved so the
+        # plan's groups follow first-occurrence order.
+        unique: "collections.OrderedDict[object, List[_Request]]" = \
+            collections.OrderedDict()
         for req in window:
             try:
-                key = fmt.group_key(req.blob)
+                fmt.group_key(req.blob)   # metadata sanity (bad codec etc.)
             except Exception as e:
                 self._fail(req, e)
                 continue
@@ -463,30 +431,44 @@ class DecompressionService:
                               else cached.copy())
                 continue
             misses += 1
-            groups.setdefault(key, collections.OrderedDict()) \
-                  .setdefault(dedupe_key, []).append(req)
+            unique.setdefault(dedupe_key, []).append(req)
 
-        for key, by_key in groups.items():
-            reps = [reqs[0].blob for reqs in by_key.values()]
+        # order reps into key groups (first-occurrence order, same as the
+        # plan's parse/group stage); each group lowers to its OWN one-group
+        # DecodePlan inside the per-group try, so an unlowerable group
+        # (corrupt extras, impossible metadata) fails alone.
+        by_key: "Dict[tuple, List[List[_Request]]]" = {}
+        for reqs in unique.values():
+            by_key.setdefault(fmt.group_key(reqs[0].blob), []).append(reqs)
+        for key, group_reqs in by_key.items():
+            device = None
+            if self._devices:
+                device = self._devices[self._rr % len(self._devices)]
+                self._rr += 1
             need_host = self._cache is not None or any(
-                not r.device for reqs in by_key.values() for r in reqs)
+                not r.device for reqs in group_reqs for r in reqs)
             try:
-                merged = fmt.concat_blobs(reps)
-                if self.bucket_shapes:
-                    merged = pad_table_to_bucket(merged)
-                table_dev = self.engine.decompress_table_device(merged)
+                plan = plan_mod.DecodePlan.build(
+                    [reqs[0].blob for reqs in group_reqs],
+                    bucket=self.bucket_shapes)
+                (g,) = plan.groups          # one key -> one fused group
+                table_dev = plan.decode_group_device(
+                    0, self.engine, device=device)
                 table = (transfers.to_host(table_dev) if need_host
                          else None)
                 dispatches += 1
+                if device is not None:
+                    k = str(device)
+                    device_dispatches[k] = device_dispatches.get(k, 0) + 1
             except Exception as e:
-                for reqs in by_key.values():
+                for reqs in group_reqs:
                     for req in reqs:
                         self._fail(req, e)
                 continue
-            row = 0
-            for reqs in by_key.values():
+            for bid, row0 in zip(g.blob_ids, g.row_offsets):
+                reqs = group_reqs[bid]
                 blob = reqs[0].blob
-                row0, row = row, row + blob.num_chunks
+                row = row0 + blob.num_chunks
                 out = out_dev = None
                 try:
                     if need_host:
@@ -516,6 +498,9 @@ class DecompressionService:
             self._dispatches += dispatches
             self._cache_hits += hits
             self._cache_misses += misses
+            for k, v in device_dispatches.items():
+                self._device_dispatches[k] = \
+                    self._device_dispatches.get(k, 0) + v
 
 
 # Process-wide default service (``api.decompress_many`` routes through it).

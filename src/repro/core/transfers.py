@@ -21,6 +21,14 @@ Two layers of enforcement:
 * :func:`count_host_transfers` counts funnel crossings (from every thread —
   the DecompressionService materializes on its worker thread) without
   forbidding them, for benchmarks that report host-round-trip traffic.
+
+The mirror direction has a funnel too: :func:`to_device` is the ONE
+sanctioned host→device staging path (plan staging, epilogue-operand
+uploads, per-device round-robin placement).  It is never forbidden —
+staging is how data legitimately reaches the device — but it is counted
+(``h2d`` / ``h2d_bytes`` in the same counter dict), so a staging cache
+regression (e.g. re-uploading epilogue operands every call) shows up as a
+growing ``h2d`` count instead of silent PCIe traffic.
 """
 from __future__ import annotations
 
@@ -57,6 +65,30 @@ def to_host(x) -> np.ndarray:
     return np.asarray(jax.device_get(x))
 
 
+def to_device(x, placement=None):
+    """Stage a host array on the device (the ONE sanctioned h2d path).
+
+    ``placement``: optional ``jax.Device`` or ``jax.sharding.Sharding`` the
+    result should live under (``None`` = default device).  Counted with
+    every active :func:`count_host_transfers` context (``h2d`` /
+    ``h2d_bytes``) so staging caches can be regression-tested; never
+    forbidden — staging is how data legitimately reaches the device.
+    Already-on-device inputs pass through ``device_put`` untouched (and
+    uncounted when no placement change is requested).
+    """
+    import jax.numpy as jnp
+    is_host = not isinstance(x, jax.Array)
+    if is_host or placement is not None:
+        nbytes = int(getattr(x, "nbytes", 0)) if is_host else 0
+        with _counters_lock:
+            for c in _counters:
+                c["h2d"] += 1 if is_host else 0
+                c["h2d_bytes"] += nbytes
+        return jax.device_put(jnp.asarray(x) if not hasattr(x, "dtype")
+                              else x, placement)
+    return x
+
+
 @contextlib.contextmanager
 def no_host_transfers() -> Iterator[None]:
     """Forbid host materialization on this thread for the duration.
@@ -78,10 +110,11 @@ def no_host_transfers() -> Iterator[None]:
 
 @contextlib.contextmanager
 def count_host_transfers() -> Iterator[Dict[str, int]]:
-    """Count :func:`to_host` crossings (all threads) while the context is
-    open.  Yields ``{"d2h": calls, "bytes": total}``; contexts may nest or
-    overlap — each active context sees every crossing."""
-    c = {"d2h": 0, "bytes": 0}
+    """Count funnel crossings (all threads) while the context is open.
+    Yields ``{"d2h": calls, "bytes": d2h bytes, "h2d": stagings,
+    "h2d_bytes": staged bytes}``; contexts may nest or overlap — each
+    active context sees every crossing."""
+    c = {"d2h": 0, "bytes": 0, "h2d": 0, "h2d_bytes": 0}
     with _counters_lock:
         _counters.append(c)
     try:

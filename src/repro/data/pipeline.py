@@ -69,22 +69,37 @@ class CompressedTokenStore:
         return c / max(1, u)
 
     def decoded_shards(self, engine: CodagEngine, window: int = 1,
-                       device_out: bool = False) -> Iterator[np.ndarray]:
+                       device_out: bool = False,
+                       mesh=None) -> Iterator[np.ndarray]:
         """Decode shards; ``window`` > 1 coalesces that many shards' chunks
         into one batched dispatch per codec group (CODAG provisioning) while
         bounding peak host memory to ~window uncompressed shards.
         ``device_out=True`` yields device-resident int32 jax arrays —
-        decode, reassembly, and the int32 widening never visit the host."""
-        cast = (lambda a: a.astype(jnp.int32)) if device_out \
-            else (lambda a: a.astype(np.int32))
-        if window <= 1:
-            for b in self.blobs:
-                yield cast(engine.decompress_device(b) if device_out
-                           else engine.decompress(b))
-            return
-        for i in range(0, len(self.blobs), window):
-            for out in cbatch.decompress_blobs(self.blobs[i:i + window],
-                                               engine, device_out=device_out):
+        decode, reassembly, and the int32 widening never visit the host.
+        ``mesh`` (implies device out) decodes each shard's chunk rows
+        across the mesh's data-axis devices and yields token shards BORN
+        sharded over that axis (``NamedSharding`` on the token dim) — the
+        input pipeline feeds a data-parallel step without a gather."""
+        device_out = device_out or mesh is not None
+        out_sh = None
+        if mesh is not None:
+            from repro.distributed import sharding as shd
+            out_sh = shd.decode_out_sharding(mesh)
+            # the int32 widening is a device op too; re-commit under the
+            # data-axis sharding so the yielded shard carries it verbatim
+            # (ragged tail shards that cannot satisfy the spec stay put)
+            from repro.core import plan as cplan
+            cast = lambda a: (jax.device_put(a.astype(jnp.int32), out_sh)
+                              if cplan.placeable(a.shape, out_sh)
+                              else a.astype(jnp.int32))
+        elif device_out:
+            cast = lambda a: a.astype(jnp.int32)
+        else:
+            cast = lambda a: a.astype(np.int32)
+        for i in range(0, len(self.blobs), max(1, window)):
+            for out in cbatch.decompress_blobs(
+                    self.blobs[i:i + max(1, window)], engine,
+                    device_out=device_out, mesh=mesh, out_shardings=out_sh):
                 yield cast(out)
 
     def decoded_shards_async(self, service: DecompressionService,
@@ -138,7 +153,12 @@ class CompressedLoader:
                  engine: Optional[CodagEngine] = None, prefetch: bool = True,
                  decode_window: int = 4,
                  service: Optional[DecompressionService] = None,
-                 device_out: bool = False):
+                 device_out: bool = False, mesh=None):
+        if service is not None and mesh is not None:
+            raise ValueError("mesh= is not supported with service=: the "
+                             "service decodes on its own single-engine "
+                             "worker; use the engine path for sharded "
+                             "token shards")
         self.store = store
         self.batch = batch
         self.seq = seq
@@ -148,7 +168,10 @@ class CompressedLoader:
         # (engine mode) or kept in flight on the service (service mode)
         self.decode_window = decode_window
         self.service = service
-        self.device_out = device_out
+        # mesh: decode every shard's rows across the mesh's data-axis
+        # devices; token shards enter the batch assembly born sharded
+        self.mesh = mesh
+        self.device_out = device_out or mesh is not None
 
     def __iter__(self) -> Iterator[Dict[str, jnp.ndarray]]:
         need = self.batch * self.seq + 1
@@ -164,7 +187,7 @@ class CompressedLoader:
                 else:
                     yield from self.store.decoded_shards(
                         self.engine, window=self.decode_window,
-                        device_out=self.device_out)
+                        device_out=self.device_out, mesh=self.mesh)
 
         src = shard_iter()
         if self.prefetch and self.service is None:

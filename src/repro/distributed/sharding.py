@@ -89,6 +89,27 @@ def constrain(x, *axes):
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
 
 
+def decode_axis(mesh: Mesh) -> str:
+    """The mesh axis decompression work partitions over.
+
+    Decode streams are embarrassingly parallel (each chunk is independent),
+    so they ride a data-parallel axis: 'data' when present, then 'pod',
+    else the mesh's first axis.  Used by ``core.plan.execute_sharded`` as
+    the default row-partition axis.
+    """
+    for a in ("data", "pod"):
+        if a in mesh.axis_names:
+            return a
+    return mesh.axis_names[0]
+
+
+def decode_out_sharding(mesh: Mesh, ndim: int = 1) -> NamedSharding:
+    """NamedSharding placing a decoded array's leading dim over
+    :func:`decode_axis` (trailing dims replicated) — the default *place*
+    target for decoded token shards and other row-major outputs."""
+    return NamedSharding(mesh, P(decode_axis(mesh), *([None] * (ndim - 1))))
+
+
 # --------------------------------------------------------------------------
 # parameter PartitionSpecs (regex on pytree path)
 # --------------------------------------------------------------------------

@@ -22,7 +22,6 @@ import threading
 from typing import Any, Dict
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import format as fmt
 from repro.core import registry
@@ -103,9 +102,15 @@ def count_dispatches():
                     break
 
 
-def table_inputs(table: fmt.CompressedBlob):
-    """(device pytree, static decode bits) for a blob / merged chunk table."""
-    dev = {k: jnp.asarray(v) for k, v in table.to_device().items()}
+def table_inputs(table: fmt.CompressedBlob, placement=None):
+    """(device pytree, static decode bits) for a blob / merged chunk table.
+
+    ``placement``: optional ``jax.Device`` / ``jax.sharding.Sharding`` the
+    staged tables should live under (multi-device schedulers stage per
+    device).  All uploads go through the ``transfers.to_device`` funnel so
+    staging traffic is countable."""
+    dev = {k: transfers.to_device(v, placement)
+           for k, v in table.to_device().items()}
     return dev, registry.get(table.codec).static_bits(table)
 
 

@@ -33,3 +33,14 @@ def make_test_mesh(shape=(2, 2), axes=("data", "model")) -> Mesh:
     """Small mesh for CPU multi-device tests (subprocess sets device count)."""
     n = int(np.prod(shape))
     return Mesh(np.asarray(jax.devices()[:n]).reshape(shape), axes)
+
+
+def make_decode_mesh(ndev: int | None = None, axis: str = "data") -> Mesh:
+    """1-D mesh over the first ``ndev`` devices (default: all) for the
+    sharded decode executor (``core.plan.execute_sharded``): every device
+    is one more independent decompressor for the plan's chunk rows."""
+    devices = jax.devices()
+    n = len(devices) if ndev is None else int(ndev)
+    if len(devices) < n:
+        raise RuntimeError(f"need {n} devices, have {len(devices)}")
+    return Mesh(np.asarray(devices[:n]), (axis,))
