@@ -1,0 +1,148 @@
+"""Autotuner + persistent-compile-cache benchmark (BENCH_autotune.json).
+
+Two claims, one artifact:
+
+  * tuned vs hand-picked — ``core.tuning.autotune`` searches each codec's
+    knob space (chunk geometry; kernel knobs on real Pallas backends)
+    against its registry ``demo_data`` and reports tuned and default
+    decoded MB/s side by side (``autotune/<codec>/speedup``).
+  * cold start with vs without the persistent compile cache — three child
+    processes around one temp cache dir: populate it, re-compile WITH it
+    (a disk load), re-compile WITHOUT it (full XLA compilation).  Each
+    probe times ``ops._decode_impl.lower(...).compile()`` per codec —
+    backend compilation only, since tracing/lowering is never cached —
+    and ``autotune/compile_cache_speedup`` is the no-cache/with-cache
+    ratio (the acceptance bar is >= 10x).
+
+    PYTHONPATH=src python -m benchmarks.autotune [--smoke] [--out F.json]
+        [--write-table PATH]    # merge winners into a tuned-defaults table
+
+``--write-table src/repro/core/tuned_defaults.json`` is how the committed
+table is regenerated on a new device kind (entries for other kinds are
+preserved; see ``tuning.merge_tables``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+PROBE_CHUNK_BYTES = 4096
+
+
+def _probe(cache_dir: str, size_kb: int) -> dict:
+    """Child-process body: compile one decode per codec, timing only the
+    backend-compile step.  ``cache_dir`` empty = no persistent cache."""
+    if cache_dir:
+        from repro.core import tuning
+        tuning.enable_compile_cache(cache_dir)
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import api, registry
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(0)
+    per = {}
+    total = 0.0
+    for name in registry.names():
+        codec = registry.get(name)
+        if codec.demo_data is None:
+            continue
+        n = max(1024, size_kb * 1024 // (1 if codec.byte_stream else 4))
+        arr = codec.demo_data(n, rng)
+        blob = api.compress(arr, name, chunk_bytes=PROBE_CHUNK_BYTES).blobs[0]
+        dev, bits = ops.table_inputs(blob)
+        dev = {k: jnp.asarray(v) for k, v in dev.items()}
+        lowered = ops._decode_impl.lower(
+            dev, codec=blob.codec, width=blob.width,
+            chunk_elems=blob.chunk_elems, backend="xla", interpret=True,
+            bits=bits, epilogue=None, tune=())
+        t0 = time.perf_counter()
+        lowered.compile()
+        dt = time.perf_counter() - t0
+        per[name] = round(dt * 1e3, 3)
+        total += dt
+    return {"total_ms": round(total * 1e3, 3), "per_codec_ms": per}
+
+
+def _run_probe(cache_dir: str, size_kb: int) -> dict:
+    """Run :func:`_probe` in a FRESH interpreter (the persistent cache only
+    matters across processes: in-process jit caches would mask it)."""
+    env = dict(os.environ)
+    src = str(Path(__file__).resolve().parent.parent / "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.autotune", "--probe", cache_dir,
+         "--probe-kb", str(size_kb)],
+        capture_output=True, text=True, env=env, timeout=600,
+        cwd=str(Path(__file__).resolve().parent.parent))
+    if out.returncode != 0:
+        raise RuntimeError(f"probe subprocess failed:\n{out.stderr[-2000:]}")
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def run(smoke: bool = False, size_mb: float = 0.25, probe_kb: int = 16,
+        iters: int = 3, write_table: str | None = None):
+    from repro.core import tuning
+
+    table, rows = tuning.autotune(size_mb=size_mb, smoke=smoke,
+                                  iters=1 if smoke else iters)
+    if write_table:
+        merged = tuning.merge_tables(tuning.load_table(write_table), table)
+        path = tuning.save_table(merged, write_table)
+        print(f"# wrote tuned-defaults table {path}", flush=True)
+
+    # cold-start probe trio around one temp cache dir
+    with tempfile.TemporaryDirectory(prefix="repro-jit-cache-") as d:
+        _run_probe(d, probe_kb)                      # populate
+        warm = _run_probe(d, probe_kb)               # compile = disk load
+        cold = _run_probe("", probe_kb)              # no cache: full compile
+    speedup = cold["total_ms"] / max(warm["total_ms"], 1e-9)
+    rows += [
+        ("autotune/compile_cold_ms/no_cache", cold["total_ms"],
+         "sum over codecs, fresh process"),
+        ("autotune/compile_cold_ms/with_cache", warm["total_ms"],
+         "sum over codecs, fresh process + persistent cache"),
+        ("autotune/compile_cache_speedup", round(speedup, 2),
+         "second-process cold start, no-cache / with-cache"),
+    ]
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--size-mb", type=float, default=0.25)
+    ap.add_argument("--probe-kb", type=int, default=16)
+    ap.add_argument("--out", default=None, help="also write a JSON artifact")
+    ap.add_argument("--write-table", default=None,
+                    help="merge autotune winners into this tuned-defaults "
+                         "JSON (e.g. src/repro/core/tuned_defaults.json)")
+    ap.add_argument("--probe", default=None, nargs="?", const="",
+                    help=argparse.SUPPRESS)   # internal subprocess entry
+    args = ap.parse_args()
+
+    if args.probe is not None:
+        print(json.dumps(_probe(args.probe, args.probe_kb)))
+        return
+
+    rows = run(smoke=args.smoke, size_mb=args.size_mb,
+               probe_kb=args.probe_kb, write_table=args.write_table)
+    print("name,value,derived")
+    for name, value, derived in rows:
+        print(f"{name},{value},{derived}")
+    if args.out:
+        from benchmarks.common import write_bench_json
+        cfg = {"smoke": bool(args.smoke), "size_mb": args.size_mb,
+               "probe_kb": args.probe_kb}
+        print(f"# wrote {write_bench_json(args.out, 'autotune', cfg, rows)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -36,8 +36,9 @@ from pathlib import Path
 
 def build_suites(args) -> dict:
     """{suite: (config_dict, thunk)} — the thunk returns CSV rows."""
-    from benchmarks import (ablations, batched, device_resident, ratios,
-                            roofline_report, serving, sharded, throughput)
+    from benchmarks import (ablations, autotune, batched, device_resident,
+                            ratios, roofline_report, serving, sharded,
+                            throughput)
     size_mb = 0.05 if args.smoke else args.size_mb
     batched_cfg = ({"n_arrays": 8, "kb_per_array": 8, "iters": 1}
                    if args.smoke else
@@ -56,6 +57,10 @@ def build_suites(args) -> dict:
                    {"n_arrays": 8,
                     "kb_per_array": max(16, int(args.size_mb * 64)),
                     "iters": 3, "ndev": 8})
+    autotune_cfg = ({"smoke": True, "size_mb": 0.05, "probe_kb": 8}
+                    if args.smoke else
+                    {"smoke": False, "size_mb": min(size_mb, 0.25),
+                     "probe_kb": 16})
     return {
         "throughput": ({"size_mb": size_mb},
                        lambda: throughput.run(size_mb)),
@@ -71,6 +76,7 @@ def build_suites(args) -> dict:
         "serving": (serving_cfg, lambda: serving.run(**serving_cfg)),
         "device": (device_cfg, lambda: device_resident.run(**device_cfg)),
         "sharded": (sharded_cfg, lambda: sharded.run(**sharded_cfg)),
+        "autotune": (autotune_cfg, lambda: autotune.run(**autotune_cfg)),
     }
 
 
@@ -80,7 +86,7 @@ def main() -> None:
                 help="per-dataset size; 0.25 keeps the full suite ~10 min on CPU")
     ap.add_argument("--only", default=None,
                     help="throughput|ablation_decode|ablation_unit|ratios|"
-                         "roofline|batched|serving|device|sharded")
+                         "roofline|batched|serving|device|sharded|autotune")
     ap.add_argument("--all", action="store_true",
                     help="write one BENCH_<suite>.json per suite "
                          "(shared schema) into --out-dir")
@@ -88,12 +94,28 @@ def main() -> None:
                     help="CI sizes: every suite finishes in seconds")
     ap.add_argument("--out-dir", default=".",
                     help="where --all writes the BENCH_*.json artifacts")
+    ap.add_argument("--update-baselines", action="store_true",
+                    help="also write each suite's artifact into "
+                         "benchmarks/baselines/ (the committed reference "
+                         "scripts/check_bench.py gates CI against)")
+    ap.add_argument("--compile-cache", nargs="?", const=True, default=None,
+                    metavar="DIR",
+                    help="enable the persistent jit compilation cache "
+                         "(tuning.enable_compile_cache) before any suite "
+                         "runs; optional dir, default dir when given bare")
     args = ap.parse_args()
+
+    if args.compile_cache:
+        from repro.core import tuning
+        path = tuning.enable_compile_cache(
+            None if args.compile_cache is True else args.compile_cache)
+        print(f"# compile cache: {path}", flush=True)
 
     from benchmarks.common import write_bench_json
     suites = build_suites(args)
     if args.only:
         suites = {args.only: suites[args.only]}
+    baseline_dir = Path(__file__).resolve().parent / "baselines"
 
     print("name,value,derived")
     ok = True
@@ -109,6 +131,11 @@ def main() -> None:
                     Path(args.out_dir) / f"BENCH_{sname}.json",
                     sname, cfg, rows)
                 print(f"# wrote {out}", flush=True)
+            if args.update_baselines:
+                cfg = dict(config, smoke=bool(args.smoke))
+                out = write_bench_json(
+                    baseline_dir / f"BENCH_{sname}.json", sname, cfg, rows)
+                print(f"# wrote baseline {out}", flush=True)
         except Exception as e:  # pragma: no cover
             ok = False
             print(f"{sname}/ERROR,{type(e).__name__},{e}", file=sys.stderr)

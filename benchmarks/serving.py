@@ -37,6 +37,28 @@ from repro.core.server import DecompressionService
 from repro.kernels import ops
 
 
+# --- backend-compile accounting -------------------------------------------
+# One process-wide jax.monitoring listener accumulating XLA backend-compile
+# durations; run() reads it by index range to attribute compile time to the
+# priming pass.  Registered once (jax has no unregister API).
+_compile_secs: list = []
+_listener_on = False
+
+
+def _ensure_compile_listener() -> None:
+    global _listener_on
+    if _listener_on:
+        return
+    import jax
+
+    def _cb(event, duration, **kw):
+        if "backend_compile" in event:
+            _compile_secs.append(duration)
+
+    jax.monitoring.register_event_duration_secs_listener(_cb)
+    _listener_on = True
+
+
 def build_pool(n_unique: int, kb_per_blob: int, chunk_bytes: int, seed: int):
     """Unique mixed-codec blobs (every registered codec contributes)."""
     rng = np.random.default_rng(seed)
@@ -117,14 +139,31 @@ def run(n_requests: int = 96, n_tenants: int = 6, n_unique: int = 24,
                          seed)
     engine = CodagEngine(EngineConfig())
 
+    # priming pass on a throwaway service: jit caches are process-global,
+    # so this pays every window-bucket compilation ONCE while the
+    # monitoring listener attributes it — compile time becomes its own
+    # metric (serving/compile_ms) instead of polluting the cold-pass
+    # latency percentiles.  With tuning.enable_compile_cache() active the
+    # same number directly shows the persistent cache's cold-start win.
+    _ensure_compile_listener()
+    mark = len(_compile_secs)
+    with DecompressionService(engine, max_delay_ms=max_delay_ms,
+                              idle_ms=max_delay_ms / 2,
+                              cache_bytes=0) as svc_prime:
+        _serve_trace(svc_prime, traces, blobs, arrays)
+    compile_ms = sum(_compile_secs[mark:]) * 1e3
+
     svc = DecompressionService(engine, max_delay_ms=max_delay_ms,
                                idle_ms=max_delay_ms / 2,
                                cache_bytes=cache_mb << 20)
-    # pass 1 is cold (jit compiles per fresh window bucket, empty cache);
-    # pass 2 replays the same offered load in steady state: shape buckets
-    # hit the jit cache and repeated blobs hit the decoded-blob cache.
+    # pass 1 is cold for the SERVICE (empty decoded-blob cache) but
+    # compile-free after priming; pass 2 replays the same offered load in
+    # steady state: shape buckets hit the jit cache and repeated blobs hit
+    # the decoded-blob cache.
+    mark = len(_compile_secs)
     lat_cold, disp_cold, served_bytes, t_cold = _serve_trace(
         svc, traces, blobs, arrays)
+    residual_compile_ms = sum(_compile_secs[mark:]) * 1e3
     lat_steady, disp_steady, _, t_steady = _serve_trace(
         svc, traces, blobs, arrays)
     svc_stats = svc.stats()
@@ -153,7 +192,12 @@ def run(n_requests: int = 96, n_tenants: int = 6, n_unique: int = 24,
         ("serving/blobs_per_window", svc_stats.blobs_per_window, ""),
         ("serving/dispatches_per_window", svc_stats.dispatches_per_window, ""),
         ("serving/cache_hit_rate", svc_stats.cache_hit_rate, ""),
-        ("serving/latency_p50_ms/cold", float(np.percentile(lat_cold, 50)), ""),
+        ("serving/compile_ms", round(compile_ms, 2),
+         "backend-compile time of the serving path (priming pass)"),
+        ("serving/compile_ms/residual_cold", round(residual_compile_ms, 2),
+         "compile leaking into the cold pass after priming"),
+        ("serving/latency_p50_ms/cold", float(np.percentile(lat_cold, 50)),
+         "compile-free: jit primed, decoded-blob cache empty"),
         ("serving/latency_p99_ms/cold", float(np.percentile(lat_cold, 99)), ""),
         ("serving/latency_p50_ms", float(np.percentile(lat_steady, 50)),
          "steady state"),

@@ -1,0 +1,162 @@
+"""Perf-trajectory CI gate: diff fresh BENCH_*.json against baselines.
+
+``benchmarks.run --all --smoke`` writes one ``BENCH_<suite>.json`` per
+suite (shared schema ``{name, config, metrics, timestamp}``).  This gate
+compares each against the committed reference under
+``benchmarks/baselines/`` and fails (exit 1) when the trajectory regresses:
+
+  * a baselined suite produced no artifact, or a baselined metric
+    disappeared from it (coverage regression);
+  * the run's config differs from the baseline's (the numbers would not
+    be comparable — regenerate with ``benchmarks.run --update-baselines``);
+  * a DETERMINISTIC metric (compression ratios, symbol lengths, dispatch /
+    launch / transfer counts, dataset geometry) drifted at all;
+  * with ``--strict``, a TIMING metric left its tolerance band in the bad
+    direction (throughput/speedup metrics may not drop below
+    ``baseline * (1 - tol)``; latency/compile-time metrics may not rise
+    above ``baseline * (1 + tol)``).
+
+Timing metrics are classified by name and SKIPPED by default — shared CI
+runners are too noisy to hard-gate wall-clock numbers, so the default gate
+is exact on everything machine-independent and silent on the rest.  Metrics
+in neither class (window counts, autotuned knob picks, …) are
+presence-checked only.
+
+    PYTHONPATH=src python scripts/check_bench.py [--bench-dir .]
+        [--strict] [--tol 0.5] [--only SUITE]
+
+Refreshing the reference after an intentional perf/coverage change:
+
+    PYTHONPATH=src python -m benchmarks.run --all --smoke --update-baselines
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+from pathlib import Path
+
+_ROOT = Path(__file__).resolve().parent.parent
+BASELINE_DIR = _ROOT / "benchmarks" / "baselines"
+
+# Machine-independent metrics: same inputs => same value, on any host.
+DETERMINISTIC_RE = re.compile(
+    r"^(ratio|symlen)/"
+    r"|/(n_arrays|n_layers|n_requests|n_tenants|unique_blobs|ndev|groups"
+    r"|total_MB|served_MB|weight_MB|compression_ratio)$"
+    r"|launches_per_restore|host_transfers_per_iter|host_bytes_per_iter")
+
+# Wall-clock-derived metrics, split by which direction is a regression.
+HIGHER_IS_BETTER_RE = re.compile(
+    r"MBps|speedup|tok_s|over_single|over_block|geomean|hit_rate"
+    r"|flops_ratio|codecs_improved")
+LOWER_IS_BETTER_RE = re.compile(
+    r"_ms\b|_ms/|latency|amplification|seconds|_secs|_s$|/t_\w+_s$")
+
+
+def classify(name: str) -> str:
+    if DETERMINISTIC_RE.search(name):
+        return "deterministic"
+    if HIGHER_IS_BETTER_RE.search(name):
+        return "timing_higher"
+    if LOWER_IS_BETTER_RE.search(name):
+        return "timing_lower"
+    return "info"
+
+
+def _num(v):
+    return v if isinstance(v, (int, float)) and not isinstance(v, bool) else None
+
+
+def compare(suite: str, base: dict, cur: dict, *, strict: bool,
+            tol: float) -> list[str]:
+    problems = []
+    if base.get("config") != cur.get("config"):
+        problems.append(
+            f"{suite}: config changed {base.get('config')} -> "
+            f"{cur.get('config')} (regenerate baselines)")
+        return problems   # numbers are not comparable across configs
+
+    bm, cm = base.get("metrics", {}), cur.get("metrics", {})
+    for name in sorted(set(bm) - set(cm)):
+        problems.append(f"{suite}: metric {name} disappeared")
+    for name in sorted(set(bm) & set(cm)):
+        b, c = _num(bm[name]), _num(cm[name])
+        if b is None or c is None:
+            continue
+        kind = classify(name)
+        if kind == "deterministic":
+            if abs(c - b) > 1e-6 * max(1.0, abs(b)):
+                problems.append(
+                    f"{suite}: deterministic metric {name} drifted "
+                    f"{b} -> {c}")
+        elif strict and kind == "timing_higher":
+            if c < b * (1.0 - tol):
+                problems.append(
+                    f"{suite}: {name} regressed {b:.4g} -> {c:.4g} "
+                    f"(< {1 - tol:.0%} of baseline)")
+        elif strict and kind == "timing_lower":
+            if b > 0 and c > b * (1.0 + tol):
+                problems.append(
+                    f"{suite}: {name} regressed {b:.4g} -> {c:.4g} "
+                    f"(> {1 + tol:.0%} of baseline)")
+    return problems
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench-dir", default=".",
+                    help="where the fresh BENCH_*.json artifacts are")
+    ap.add_argument("--baseline-dir", default=str(BASELINE_DIR))
+    ap.add_argument("--only", default=None, help="gate a single suite")
+    ap.add_argument("--strict", action="store_true",
+                    help="also band-check timing metrics (quiet machines)")
+    ap.add_argument("--tol", type=float, default=0.5,
+                    help="--strict tolerance band (0.5 = 50%%)")
+    args = ap.parse_args()
+
+    baseline_dir = Path(args.baseline_dir)
+    bench_dir = Path(args.bench_dir)
+    baselines = sorted(baseline_dir.glob("BENCH_*.json"))
+    if args.only:
+        baselines = [p for p in baselines
+                     if p.name == f"BENCH_{args.only}.json"]
+    if not baselines:
+        print(f"BENCH CHECK FAILED: no baselines under {baseline_dir} "
+              f"(run benchmarks.run --all --smoke --update-baselines)",
+              file=sys.stderr)
+        return 1
+
+    problems: list[str] = []
+    checked = skipped = 0
+    for bp in baselines:
+        suite = bp.stem.removeprefix("BENCH_")
+        cp = bench_dir / bp.name
+        if not cp.exists():
+            problems.append(f"{suite}: no fresh artifact at {cp}")
+            continue
+        base = json.loads(bp.read_text())
+        cur = json.loads(cp.read_text())
+        problems += compare(suite, base, cur, strict=args.strict,
+                            tol=args.tol)
+        for name in base.get("metrics", {}):
+            kind = classify(name)
+            if kind == "deterministic" or (args.strict and
+                                           kind.startswith("timing")):
+                checked += 1
+            else:
+                skipped += 1
+
+    if problems:
+        for p in problems:
+            print(f"BENCH CHECK FAILED: {p}", file=sys.stderr)
+        return 1
+    mode = "strict" if args.strict else "default"
+    print(f"bench trajectory ok: {len(baselines)} suites, "
+          f"{checked} metrics gated, {skipped} skipped ({mode} mode)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -8,7 +8,10 @@ Fails (exit 1) if any registered codec is missing from:
     or
   * the golden conformance vectors (tests/vectors/<codec>.json — the
     committed encode/decode fixtures tests/test_conformance.py runs on
-    every backend).
+    every backend), or
+  * the committed tuned-defaults table (src/repro/core/tuned_defaults.json
+    — every codec needs an entry, possibly an explicit ``{}``, and knob
+    names must be known to core.tuning / the codec's DecodeSpec tunables).
 
 Also validates that every codec's plugin surface is complete enough for
 those matrices to actually exercise it (encode/decode hooks + demo data),
@@ -76,6 +79,31 @@ def main() -> int:
         if n_vec < 5:
             problems.append(
                 f"{name}: only {n_vec} golden vectors (full matrix expected)")
+
+    # tuned-defaults coverage: every codec must appear in the committed
+    # autotune table — an empty {} is the explicit "nothing tuned yet"
+    # fallback — and every knob it carries must be one the engine
+    # understands (tuning.KNOWN_KNOBS + the codec's own DecodeSpec
+    # tunables), so a typo'd knob name cannot silently become a no-op.
+    from repro.core import tuning
+    tuned = tuning.load_table().get("codecs", {})
+    for name in sorted(names):
+        if name not in tuned:
+            problems.append(
+                f"{name}: missing from tuned-defaults table "
+                f"({tuning.DEFAULT_TABLE_PATH.name}; an explicit {{}} entry "
+                f"counts — run benchmarks.autotune --write-table)")
+            continue
+        spec = registry.get(name).decode
+        allowed = set(tuning.KNOWN_KNOBS) | {
+            t.name for t in getattr(spec, "tunables", ())}
+        for width_key, kinds in tuned[name].items():
+            for kind, knobs in kinds.items():
+                unknown = {k for k in knobs if not k.startswith("_")} - allowed
+                if unknown:
+                    problems.append(
+                        f"{name}: unknown tuned knobs {sorted(unknown)} "
+                        f"({width_key}/{kind}); allowed: {sorted(allowed)}")
 
     # plugin surface completeness + a tiny end-to-end round trip per codec,
     # with the plan-lowering gate armed: every kernel dispatch the round

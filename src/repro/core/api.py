@@ -43,8 +43,12 @@ class CompressedArray:
 
 
 def compress(arr: np.ndarray, codec: str,
-             chunk_bytes: int = fmt.DEFAULT_CHUNK_BYTES,
+             chunk_bytes: Optional[int] = None,
              bits: Optional[int] = None) -> CompressedArray:
+    """Compress one array.  ``chunk_bytes=None`` resolves the tuned chunk
+    size for this codec/width/device from ``core.tuning``'s committed
+    defaults table, falling back to ``format.DEFAULT_CHUNK_BYTES``; an
+    explicit value always wins (``encoders.compress`` resolution)."""
     if arr.dtype.itemsize == 8 and registry.get(codec).plane_decompose_64:
         # plane decomposition: lo/hi u32 planes keep runs intact
         as_u64 = arr.reshape(-1).view(np.uint64)
@@ -88,7 +92,7 @@ def decompress(ca: CompressedArray,
 
 def compress_many(arrays: Sequence[np.ndarray],
                   codec: Union[str, Sequence[str]],
-                  chunk_bytes: int = fmt.DEFAULT_CHUNK_BYTES,
+                  chunk_bytes: Optional[int] = None,
                   bits: Optional[int] = None) -> List[CompressedArray]:
     """Compress a list of arrays; ``codec`` may be one name or one per array.
 

@@ -521,7 +521,19 @@ def compress_bitpack(arr: np.ndarray,
 
 
 def compress(arr: np.ndarray, codec: str,
-             chunk_bytes: int = fmt.DEFAULT_CHUNK_BYTES,
+             chunk_bytes: int | None = None,
              bits: int | None = None) -> fmt.CompressedBlob:
-    from repro.core import registry
+    """Encode ``arr`` through the codec registry.
+
+    ``chunk_bytes=None`` (the default) resolves the tuned chunk size for
+    this (codec, element width) on the current device from the
+    tuned-defaults table (``core.tuning``), falling back to
+    ``format.DEFAULT_CHUNK_BYTES``; an explicit value always wins.
+    """
+    from repro.core import registry, tuning
+    if chunk_bytes is None:
+        chunk_bytes = tuning.chunk_bytes_for(
+            codec, tuning.encode_width(codec, arr.dtype))
+        if chunk_bytes is None:
+            chunk_bytes = fmt.DEFAULT_CHUNK_BYTES
     return registry.get(codec).encode(arr, chunk_bytes, bits=bits)

@@ -46,6 +46,9 @@ class EngineConfig:
     all_thread: bool = True     # False = §V-E single-thread decoding
     backend: str = "xla"        # "xla" | "pallas" | "oracle"
     interpret: bool = True      # pallas interpret mode (CPU validation)
+    # explicit kernel-knob overrides ((name, value), ...) — merged over the
+    # tuned-defaults table per dispatch (explicit wins; ``core.tuning``)
+    tune: tuple = ()
 
 
 class CodagEngine:

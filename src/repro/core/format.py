@@ -216,7 +216,8 @@ def _next_pow2(n: int) -> int:
     return 1 << max(0, n - 1).bit_length() if n > 1 else 1
 
 
-def pad_table_to_bucket(table: "CompressedBlob") -> "CompressedBlob":
+def pad_table_to_bucket(table: "CompressedBlob",
+                        cols_floor: Optional[int] = None) -> "CompressedBlob":
     """Pad a merged chunk table to power-of-two row/column buckets.
 
     Every micro-batch window fuses a different set of blobs, so the merged
@@ -225,10 +226,21 @@ def pad_table_to_bucket(table: "CompressedBlob") -> "CompressedBlob":
     zero-length chunks (:func:`pad_table_rows`) and columns with zero bytes
     buckets the jit cache by ``(group key, pow2 rows, pow2 cols)``: after a
     handful of windows the steady state is compile-free.
+
+    ``cols_floor`` is the minimum column bucket — the knob trading padding
+    waste (small tables inflated to the floor) against jit-cache pressure
+    (more distinct shapes below it).  Explicit values win; ``None``
+    consults the tuned-defaults table for this blob's (codec, width) on
+    the current device (``core.tuning``), and with no tuning entry the
+    historical floor of 128 applies unchanged.
     """
+    if cols_floor is None:
+        from repro.core import tuning
+        cols_floor = tuning.bucket_cols_floor(table.codec, table.width)
+    floor = 128 if cols_floor is None else int(cols_floor)
     padded = pad_table_rows(table, _next_pow2(table.num_chunks))
     cols = int(padded.comp.shape[1])
-    target_cols = max(128, _next_pow2(cols))
+    target_cols = max(floor, _next_pow2(cols))
     if target_cols == cols:
         return padded
     comp = np.zeros((padded.num_chunks, target_cols), np.uint8)

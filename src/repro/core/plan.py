@@ -103,7 +103,7 @@ def count_lowered():
 
 
 def dispatch(dev: Dict[str, Any], *, config, codec: str, width: int,
-             chunk_elems: int, bits: int = 0, epilogue=None):
+             chunk_elems: int, bits: int = 0, epilogue=None, tune=None):
     """Stage 3 of the pipeline: lower one fused chunk table to ``ops.decode``.
 
     ``config`` is an ``engine.EngineConfig`` (hashable, jit-static): it
@@ -112,9 +112,18 @@ def dispatch(dev: Dict[str, Any], *, config, codec: str, width: int,
     fixed-pool RAPIDS baseline by scanning serial batches of ``n_units``
     streams.  This function is the only ``ops.decode`` call site outside
     the kernels layer — every entry path's decode lowers through it.
+
+    ``tune``: the static kernel-knob tuple (``core.tuning.kernel_tune``).
+    ``None`` resolves tuned defaults merged with ``config.tune`` here —
+    only safe outside an outer jit trace; the plan's jitted executors
+    resolve it eagerly and pass it through as a static argument.
     """
     import jax
     import jax.numpy as jnp
+
+    if tune is None:
+        from repro.core import tuning
+        tune = tuning.kernel_tune(codec, width, getattr(config, "tune", ()))
 
     with _lowered_lock:
         if _lowered:
@@ -129,7 +138,7 @@ def dispatch(dev: Dict[str, Any], *, config, codec: str, width: int,
         return ops.decode(dev, codec=codec, width=width,
                           chunk_elems=chunk_elems, backend=backend,
                           interpret=config.interpret, bits=bits,
-                          epilogue=epilogue)
+                          epilogue=epilogue, tune=tune)
     # "block": fixed pool of n_units streams; serial over chunk batches.
     n_chunks = dev["comp"].shape[0]
     nu = min(config.n_units, n_chunks)
@@ -158,7 +167,7 @@ def dispatch(dev: Dict[str, Any], *, config, codec: str, width: int,
         out = ops.decode({**batch, **shared}, codec=codec, width=width,
                          chunk_elems=chunk_elems, backend=backend,
                          interpret=config.interpret, bits=bits,
-                         epilogue=epilogue)
+                         epilogue=epilogue, tune=tune)
         return carry, out
 
     _, outs = jax.lax.scan(step, 0, scanned)
@@ -185,12 +194,16 @@ def _decode_scatter_fn():
     import jax
 
     @functools.partial(jax.jit, static_argnames=(
-        "cfg", "codec", "width", "chunk_elems", "bits", "epilogue", "meta"))
+        "cfg", "codec", "width", "chunk_elems", "bits", "epilogue", "meta",
+        "tune"))
     def decode_scatter(dev, scatter, *, cfg, codec, width, chunk_elems,
-                       bits, epilogue, meta):
+                       bits, epilogue, meta, tune):
+        # tune is resolved by the caller OUTSIDE this trace and rides in as
+        # a static arg: a swapped tuning table changes the jit key instead
+        # of silently reusing a compilation built with the old knobs
         table = dispatch(dev, config=cfg, codec=codec, width=width,
                          chunk_elems=chunk_elems, bits=bits,
-                         epilogue=epilogue)
+                         epilogue=epilogue, tune=tune)
         return _scatter_place(table, scatter, meta)
 
     return decode_scatter
@@ -269,9 +282,9 @@ def _sharded_decode_fn():
 
     @functools.partial(jax.jit, static_argnames=(
         "cfg", "codec", "width", "chunk_elems", "bits", "epilogue", "meta",
-        "mesh", "axis", "perchunk"))
+        "mesh", "axis", "perchunk", "tune"))
     def decode_sharded(dev, scatter, *, cfg, codec, width, chunk_elems,
-                       bits, epilogue, meta, mesh, axis, perchunk):
+                       bits, epilogue, meta, mesh, axis, perchunk, tune):
         in_specs = ({k: P(axis, *([None] * (v.ndim - 1))) if k in perchunk
                      else P(*([None] * v.ndim))
                      for k, v in dev.items()},)
@@ -279,7 +292,7 @@ def _sharded_decode_fn():
         def local(d):
             return dispatch(d, config=cfg, codec=codec, width=width,
                             chunk_elems=chunk_elems, bits=bits,
-                            epilogue=epilogue)
+                            epilogue=epilogue, tune=tune)
 
         table = shard_map(local, mesh=mesh, in_specs=in_specs,
                           out_specs=P(axis, None), check_rep=False)(dev)
@@ -388,14 +401,17 @@ class DecodePlan:
 
     @classmethod
     def build(cls, blobs: Sequence[fmt.CompressedBlob], *,
-              bucket: bool = False) -> "DecodePlan":
+              bucket: bool = False,
+              bucket_floor: Optional[int] = None) -> "DecodePlan":
         """Parse/group stage: one ``PlanGroup`` per distinct group key.
 
         ``bucket=True`` pads each merged table to pow2 row/column buckets
         (``format.pad_table_to_bucket``) so a long-lived caller (the
         serving window loop) hits the jit cache across differently-sized
         batches.  Padding rows trail the real rows, so per-blob row ranges
-        are unaffected.
+        are unaffected.  ``bucket_floor`` overrides the minimum column
+        bucket; by default ``pad_table_to_bucket`` resolves it from the
+        tuned-defaults table (``core.tuning``), falling back to 128.
         """
         blobs = list(blobs)
         by_key: Dict[tuple, List[int]] = {}
@@ -409,7 +425,8 @@ class DecodePlan:
                 row += blobs[i].num_chunks
             merged = fmt.concat_blobs([blobs[i] for i in ids])
             if bucket:
-                merged = fmt.pad_table_to_bucket(merged)
+                merged = fmt.pad_table_to_bucket(merged,
+                                                 cols_floor=bucket_floor)
             groups.append(PlanGroup(
                 key=key, blob_ids=tuple(ids), row_offsets=tuple(offsets),
                 merged=merged, members=tuple(blobs[i] for i in ids)))
@@ -533,9 +550,12 @@ class DecodePlan:
             self_staged[gi] = ops.table_inputs(self.groups[gi].merged,
                                                device)[0]
         codec, width, chunk_elems, bits = self.groups[gi].key
+        from repro.core import tuning
         return dispatch(self_staged[gi], config=engine.config, codec=codec,
                         width=width, chunk_elems=chunk_elems, bits=bits,
-                        epilogue=epilogue)
+                        epilogue=epilogue,
+                        tune=tuning.kernel_tune(codec, width,
+                                                engine.config.tune))
 
     def _blob_meta(self, g: PlanGroup, transformed: bool,
                    places: Optional[List]) -> tuple:
@@ -586,6 +606,7 @@ class DecodePlan:
         places = self._place_list(out_shardings, len(self.blobs))
         outs: List[Any] = [None] * len(self.blobs)
         decode_scatter = _decode_scatter_fn()
+        from repro.core import tuning
         for gi, g in enumerate(self.groups):
             dev = self._staged[None][gi]
             if ops_extra:
@@ -595,7 +616,8 @@ class DecodePlan:
                 dev, list(self._staged_scatter[None][gi]),
                 cfg=engine.config, codec=codec, width=width,
                 chunk_elems=chunk_elems, bits=bits, epilogue=epilogue,
-                meta=self._blob_meta(g, epilogue is not None, places))
+                meta=self._blob_meta(g, epilogue is not None, places),
+                tune=tuning.kernel_tune(codec, width, engine.config.tune))
             for bid, out in zip(g.blob_ids, group_outs):
                 outs[bid] = out
         return outs
@@ -622,6 +644,7 @@ class DecodePlan:
         places = self._place_list(out_shardings, len(self.blobs))
         outs: List[Any] = [None] * len(self.blobs)
         decode_sharded = _sharded_decode_fn()
+        from repro.core import tuning
         for gi, g in enumerate(self.groups):
             dev, perchunk = self._staged[(mesh, axis)][gi]
             if ops_extra:
@@ -632,7 +655,8 @@ class DecodePlan:
                 cfg=engine.config, codec=codec, width=width,
                 chunk_elems=chunk_elems, bits=bits, epilogue=epilogue,
                 meta=self._blob_meta(g, epilogue is not None, places),
-                mesh=mesh, axis=axis, perchunk=perchunk)
+                mesh=mesh, axis=axis, perchunk=perchunk,
+                tune=tuning.kernel_tune(codec, width, engine.config.tune))
             for bid, out in zip(g.blob_ids, group_outs):
                 outs[bid] = out
         return outs

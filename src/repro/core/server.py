@@ -160,6 +160,14 @@ class DecompressionService:
                       dispatch geometry (the default service disables both
                       this and the cache, for ``decompress_many``'s
                       one-shot batches).
+    bucket_cols_floor: explicit minimum pow2 column bucket for fused
+                      window tables; None consults the tuned-defaults
+                      table (``core.tuning``), falling back to 128.
+    compile_cache:    wire up jax's persistent compilation cache via
+                      ``tuning.enable_compile_cache`` — True for the
+                      default directory, or a path.  A restarted replica
+                      then loads its decode kernels from disk instead of
+                      recompiling them.
     devices:          optional list of ``jax.Device``s — each window's
                       fused group dispatches are assigned round-robin
                       across them (group i → device (rr+i) mod N), with
@@ -174,16 +182,28 @@ class DecompressionService:
                  idle_ms: Optional[float] = None,
                  cache_bytes: int = 32 << 20,
                  bucket_shapes: bool = True,
+                 bucket_cols_floor: Optional[int] = None,
+                 compile_cache=None,
                  devices: Optional[Sequence] = None,
                  latency_window: int = 4096):
         if max_batch_blobs < 1:
             raise ValueError("max_batch_blobs must be >= 1")
+        if compile_cache:
+            # persistent jit cache: a replica restart reloads its decode
+            # kernels from disk instead of re-paying XLA compilation.
+            # True = the default cache dir; a path pins the location.
+            from repro.core import tuning
+            tuning.enable_compile_cache(
+                None if compile_cache is True else compile_cache)
         self.engine = engine or CodagEngine(EngineConfig())
         self.max_batch_blobs = int(max_batch_blobs)
         self.max_delay_ms = float(max_delay_ms)
         self.idle_ms = min(float(idle_ms if idle_ms is not None else 0.5),
                            self.max_delay_ms) if max_delay_ms > 0 else 0.0
         self.bucket_shapes = bool(bucket_shapes)
+        # explicit pow2-bucketing column floor; None = consult the tuned
+        # defaults inside pad_table_to_bucket (historical 128 fallback)
+        self.bucket_cols_floor = bucket_cols_floor
         self._q: "queue.Queue" = queue.Queue()
         self._lock = threading.Lock()
         self._closed = False
@@ -450,7 +470,8 @@ class DecompressionService:
             try:
                 plan = plan_mod.DecodePlan.build(
                     [reqs[0].blob for reqs in group_reqs],
-                    bucket=self.bucket_shapes)
+                    bucket=self.bucket_shapes,
+                    bucket_floor=self.bucket_cols_floor)
                 (g,) = plan.groups          # one key -> one fused group
                 table_dev = plan.decode_group_device(
                     0, self.engine, device=device)

@@ -1,0 +1,426 @@
+"""Per-(codec, width, device_kind) kernel autotuning + persistent jit cache.
+
+CODAG's throughput argument is that decompression must saturate the
+hardware scheduler — but every knob that controls saturation in this repo
+was a hand-picked constant: ``format.DEFAULT_CHUNK_BYTES`` (how many
+elements each independent stream carries), the pow2 bucketing column floor
+in ``format.pad_table_to_bucket`` (jit-cache reuse vs padding waste), the
+generic Pallas wrapper's pipeline depth, and bitpack's output tile.
+Sitaridi et al. (arXiv 1606.00519) and Rivera et al. (arXiv 2201.09118)
+both show the winning configuration shifts per format and per device; this
+module makes those knobs *data*:
+
+  * a committed tuned-defaults table (``tuned_defaults.json`` next to this
+    module) keyed ``codec -> w<width> -> device_kind -> {knob: value}``.
+    ``DecodePlan.build``/``pad_table_to_bucket`` (bucket floor),
+    ``api.compress``/``encoders.compress`` (chunk geometry), and
+    ``plan.dispatch`` (kernel knobs) consult it automatically whenever the
+    caller did not pass the knob explicitly — explicit kwargs always win,
+    and an unknown device_kind falls back to the hand-picked constants.
+  * :func:`autotune` — the offline search that regenerates the table from
+    each codec's registry ``demo_data`` on the current device.
+  * :func:`enable_compile_cache` — the ONE entry point that wires jax's
+    persistent compilation cache (replica cold start was paying ~3.3 s of
+    recompilation per process vs a ~5 ms steady-state dispatch; the cache
+    turns the second process's compile into a disk load).  Used by the
+    service (``DecompressionService(compile_cache=...)``), the benchmark
+    driver (``benchmarks.run --compile-cache``), and the launch scripts.
+
+Knob vocabulary (see KNOWN_KNOBS):
+
+  chunk_bytes       encode-time: uncompressed bytes per chunk (= per
+                    independent decode stream).
+  bucket_cols_floor serving-time: minimum pow2 column bucket for fused
+                    window tables.
+  num_stages        decode-time: rows per Pallas grid cell in the generic
+                    wrapper — the pipeline's DMA blocking depth (the
+                    HBM->VMEM load of block i+1 double-buffers against the
+                    decode of block i; deeper blocks amortize DMA latency).
+  <codec tunables>  decode-time knobs a codec declares on its DecodeSpec
+                    (``harness.Tunable``), e.g. bitpack's output ``tile``.
+
+Keys starting with ``_`` are provenance (measured throughputs, autotune
+config), never knobs.
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+import json
+import os
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, Iterable, Optional, Sequence, Tuple
+
+# The committed table (shipped as package data next to this module).
+DEFAULT_TABLE_PATH = Path(__file__).with_name("tuned_defaults.json")
+
+TABLE_VERSION = 1
+
+# Knobs the framework itself owns; codecs extend the vocabulary via
+# ``DecodeSpec.tunables``.  chunk_bytes/bucket_cols_floor are resolved on
+# the host paths; everything else is a kernel knob threaded to the decode
+# dispatch as a static ``tune`` tuple.
+KNOWN_KNOBS = ("chunk_bytes", "bucket_cols_floor", "num_stages")
+_HOST_KNOBS = frozenset(("chunk_bytes", "bucket_cols_floor"))
+
+# Default persistent-cache location; override with the env var or an
+# explicit path argument.
+CACHE_DIR_ENV = "REPRO_COMPILE_CACHE_DIR"
+DEFAULT_CACHE_DIR = Path.home() / ".cache" / "repro-codag-jax"
+
+_lock = threading.Lock()
+_table: Optional[Dict[str, Any]] = None          # loaded (or injected) table
+_table_path: Optional[Path] = None
+_cache_enabled_at: Optional[Path] = None
+
+
+# --------------------------------------------------------------------------
+# device identity
+# --------------------------------------------------------------------------
+
+
+def normalize_kind(kind: str) -> str:
+    """Normalize a jax ``device_kind`` string to a table key slug."""
+    return "-".join(str(kind).strip().lower().split())
+
+
+@functools.lru_cache(maxsize=1)
+def device_kind() -> str:
+    """The normalized device kind of the default jax device (e.g. ``cpu``,
+    ``tpu-v4``).  Cached — the backend does not change within a process."""
+    import jax
+    return normalize_kind(jax.devices()[0].device_kind)
+
+
+# --------------------------------------------------------------------------
+# table load / lookup
+# --------------------------------------------------------------------------
+
+
+def empty_table() -> Dict[str, Any]:
+    return {"version": TABLE_VERSION, "codecs": {}}
+
+
+def load_table(path: Optional[Path] = None) -> Dict[str, Any]:
+    """Load a tuned-defaults table from disk (missing file -> empty table)."""
+    p = Path(path) if path is not None else DEFAULT_TABLE_PATH
+    if not p.exists():
+        return empty_table()
+    table = json.loads(p.read_text())
+    if table.get("version") != TABLE_VERSION:
+        raise ValueError(
+            f"tuned-defaults table {p} has version {table.get('version')!r}, "
+            f"expected {TABLE_VERSION}")
+    return table
+
+
+def save_table(table: Dict[str, Any], path: Optional[Path] = None) -> Path:
+    """Write a table in the canonical committed form (sorted, 2-indent)."""
+    p = Path(path) if path is not None else DEFAULT_TABLE_PATH
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(json.dumps(table, indent=2, sort_keys=True) + "\n")
+    return p
+
+
+def _current_table() -> Dict[str, Any]:
+    global _table
+    with _lock:
+        if _table is None:
+            _table = load_table(_table_path)
+        return _table
+
+
+def set_table(table: Optional[Dict[str, Any]],
+              path: Optional[Path] = None) -> None:
+    """Install ``table`` as the active tuned defaults (None -> reload from
+    ``path`` / the committed file lazily).  Clears the lookup caches."""
+    global _table, _table_path
+    with _lock:
+        _table = table
+        _table_path = Path(path) if path is not None else None
+    lookup.cache_clear()
+    kernel_tune.cache_clear()
+
+
+@contextlib.contextmanager
+def override(table: Optional[Dict[str, Any]]):
+    """Temporarily install a tuned-defaults table (tests; None = no table)."""
+    global _table, _table_path
+    with _lock:
+        prev, prev_path = _table, _table_path
+    set_table(table if table is not None else empty_table())
+    try:
+        yield
+    finally:
+        with _lock:
+            _table, _table_path = prev, prev_path
+        lookup.cache_clear()
+        kernel_tune.cache_clear()
+
+
+@functools.lru_cache(maxsize=None)
+def lookup(codec: str, width: int, kind: Optional[str] = None) -> dict:
+    """Tuned knobs for ``(codec, width, device_kind)``.
+
+    Returns ``{}`` — fall back to the hand-picked constants — whenever any
+    level of the table is missing: unknown codec, an explicit per-codec
+    fallback (an empty codec section), unknown width, or an unknown/never-
+    tuned device kind.  Provenance keys (``_``-prefixed) are stripped.
+    """
+    kind = kind if kind is not None else device_kind()
+    entry = (_current_table().get("codecs", {})
+             .get(codec, {})
+             .get(f"w{int(width)}", {})
+             .get(normalize_kind(kind), {}))
+    return {k: v for k, v in entry.items() if not k.startswith("_")}
+
+
+def chunk_bytes_for(codec: str, width: int,
+                    kind: Optional[str] = None) -> Optional[int]:
+    """Tuned encode chunk size, or None (caller uses DEFAULT_CHUNK_BYTES)."""
+    v = lookup(codec, width, kind).get("chunk_bytes")
+    return int(v) if v is not None else None
+
+
+def encode_width(codec_name: str, dtype) -> int:
+    """The blob width a codec produces for arrays of ``dtype`` (the table's
+    width key): byte-stream codecs always emit width-1 blobs; 8-byte dtypes
+    are viewed/plane-decomposed to 4."""
+    import numpy as np
+
+    from repro.core import registry
+    if registry.get(codec_name).byte_stream:
+        return 1
+    w = np.dtype(dtype).itemsize
+    return 4 if w == 8 else w
+
+
+def bucket_cols_floor(codec: str, width: int,
+                      kind: Optional[str] = None) -> Optional[int]:
+    """Tuned pow2-bucketing column floor, or None (caller uses 128)."""
+    v = lookup(codec, width, kind).get("bucket_cols_floor")
+    return int(v) if v is not None else None
+
+
+@functools.lru_cache(maxsize=None)
+def kernel_tune(codec: str, width: int,
+                explicit: Tuple[Tuple[str, Any], ...] = ()) -> tuple:
+    """The static ``tune`` tuple for one decode dispatch.
+
+    Table-tuned kernel knobs (everything in the entry that is not a host
+    knob) merged with ``explicit`` overrides (``EngineConfig.tune`` /
+    direct ``ops.decode(tune=)`` callers) — explicit wins per knob.  The
+    result is a sorted, hashable ``((name, value), ...)`` tuple, safe as a
+    jit static argument.
+    """
+    merged = {k: v for k, v in lookup(codec, width).items()
+              if k not in _HOST_KNOBS}
+    merged.update(dict(explicit))
+    return tuple(sorted(merged.items()))
+
+
+# --------------------------------------------------------------------------
+# persistent compilation cache
+# --------------------------------------------------------------------------
+
+
+def enable_compile_cache(path: Optional[os.PathLike] = None) -> Path:
+    """Point jax's persistent compilation cache at ``path`` (default: the
+    ``REPRO_COMPILE_CACHE_DIR`` env var, else ``~/.cache/repro-codag-jax``).
+
+    This is the single entry point every long-lived consumer uses — the
+    serving front end, the benchmark driver, and the launch scripts — so a
+    replica's second process loads its decode kernels from disk instead of
+    re-paying XLA compilation (the serving bench's ~3.3 s cold start).
+    The thresholds are dropped to zero so even the small per-bucket decode
+    computations are cached.  Idempotent; returns the cache directory.
+    """
+    global _cache_enabled_at
+    import jax
+
+    p = Path(path if path is not None
+             else os.environ.get(CACHE_DIR_ENV, DEFAULT_CACHE_DIR))
+    p.mkdir(parents=True, exist_ok=True)
+    with _lock:
+        if _cache_enabled_at == p:
+            return p
+        jax.config.update("jax_compilation_cache_dir", str(p))
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+        try:  # cache XLA-internal autotuning artifacts too, where supported
+            jax.config.update("jax_persistent_cache_enable_xla_caches", "all")
+        except AttributeError:  # older jax: flag does not exist
+            pass
+        # jax initializes the persistent cache lazily at the FIRST compile
+        # and never re-reads the config after that, so enabling it in a
+        # process that already jitted something would silently do nothing.
+        # Dropping the in-memory handle (disk is untouched) forces the next
+        # compile to re-initialize against the directory set above.
+        try:
+            from jax.experimental.compilation_cache import (
+                compilation_cache as _cc)
+            _cc.reset_cache()
+        except Exception:  # pragma: no cover - cache module moved/renamed
+            pass
+        _cache_enabled_at = p
+    return p
+
+
+def compile_cache_dir() -> Optional[Path]:
+    """The directory :func:`enable_compile_cache` installed, or None."""
+    with _lock:
+        return _cache_enabled_at
+
+
+# --------------------------------------------------------------------------
+# the offline autotuner
+# --------------------------------------------------------------------------
+
+# Candidate chunk sizes (uncompressed bytes per stream).  The hand-picked
+# default (format.DEFAULT_CHUNK_BYTES) is always appended so "tuned" can
+# never measure worse than it on the tuning workload except by noise.
+SMOKE_CHUNK_BYTES = (4 * 1024, 16 * 1024, 64 * 1024)
+FULL_CHUNK_BYTES = (4 * 1024, 16 * 1024, 64 * 1024, 256 * 1024)
+NUM_STAGES_CANDIDATES = (1, 2, 4)
+
+
+def _median_time(fn, iters: int, warmup: int = 1) -> float:
+    import jax
+    import numpy as np
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def _measure(blob, engine, tune: Tuple[Tuple[str, Any], ...],
+             iters: int) -> float:
+    """Decoded (uncompressed) MB/s of one blob under one knob point."""
+    from repro.core import plan as plan_mod
+    plan = plan_mod.DecodePlan.build([blob])
+    cfg = engine.config
+    if tune:
+        import dataclasses
+        cfg = dataclasses.replace(
+            cfg, tune=tuple(sorted({**dict(cfg.tune), **dict(tune)}.items())))
+        import repro.core.engine as engine_mod
+        engine = engine_mod.CodagEngine(cfg)
+    t = _median_time(lambda: plan.execute_device(engine), iters=iters)
+    return blob.uncompressed_bytes / max(t, 1e-9) / 1e6
+
+
+def _kernel_knob_space(codec, engine) -> Iterable[Tuple[Tuple[str, Any], ...]]:
+    """Kernel-knob grid for one codec: the generic wrapper's ``num_stages``
+    plus the codec's declared ``DecodeSpec.tunables``.  Searched only when
+    the engine runs real (non-interpret) Pallas — on the XLA/interpret
+    paths these knobs are no-ops and searching them would only fit noise."""
+    import itertools
+    if engine.config.backend != "pallas" or engine.config.interpret:
+        yield ()
+        return
+    axes = []
+    if codec.decode.pallas_override is None:
+        axes.append([("num_stages", s) for s in NUM_STAGES_CANDIDATES])
+    for t in getattr(codec.decode, "tunables", ()):
+        axes.append([(t.name, c) for c in t.candidates])
+    if not axes:
+        yield ()
+        return
+    for combo in itertools.product(*axes):
+        yield tuple(combo)
+
+
+def autotune(codecs: Optional[Sequence[str]] = None, *,
+             size_mb: float = 0.25, smoke: bool = False,
+             engine=None, iters: int = 3, seed: int = 0,
+             chunk_bytes_candidates: Optional[Sequence[int]] = None,
+             ) -> Tuple[Dict[str, Any], list]:
+    """Search the knob space per codec on the current device.
+
+    Returns ``(table, rows)``: a tuned-defaults table for THIS device kind
+    (merge/save with :func:`save_table`) and bench-style
+    ``(name, value, derived)`` rows (tuned vs hand-picked throughput per
+    codec — the ``BENCH_autotune.json`` payload).
+    """
+    import numpy as np
+
+    from repro.core import api, format as fmt, registry
+    from repro.core.engine import CodagEngine, EngineConfig
+
+    engine = engine or CodagEngine(EngineConfig())
+    kind = device_kind()
+    if smoke:
+        size_mb = min(size_mb, 0.05)
+    cands = tuple(chunk_bytes_candidates
+                  or (SMOKE_CHUNK_BYTES if smoke else FULL_CHUNK_BYTES))
+    if fmt.DEFAULT_CHUNK_BYTES not in cands:
+        cands = cands + (fmt.DEFAULT_CHUNK_BYTES,)
+
+    table = empty_table()
+    rows: list = []
+    rng = np.random.default_rng(seed)
+    names = list(codecs) if codecs else list(registry.names())
+    for name in names:
+        codec = registry.get(name)
+        if codec.demo_data is None:
+            continue
+        n_elems = max(1024, int(size_mb * (1 << 20))
+                      // (1 if codec.byte_stream else 4))
+        arr = codec.demo_data(n_elems, rng)
+        width = encode_width(name, arr.dtype)
+
+        best: Dict[str, Any] = {}
+        best_mbps = 0.0
+        default_mbps = 0.0
+        # the search is explicit-knob only: tuned defaults must not leak
+        # into their own baseline measurement
+        with override(empty_table()):
+            for cb in cands:
+                blob = api.compress(arr, name, chunk_bytes=cb).blobs[0]
+                for ktune in _kernel_knob_space(codec, engine):
+                    mbps = _measure(blob, engine, ktune, iters)
+                    if cb == fmt.DEFAULT_CHUNK_BYTES and not ktune:
+                        default_mbps = mbps
+                    if mbps > best_mbps:
+                        best_mbps = mbps
+                        best = {"chunk_bytes": int(cb), **dict(ktune)}
+        entry = dict(best)
+        entry["_tuned_MBps"] = round(best_mbps, 3)
+        entry["_default_MBps"] = round(default_mbps, 3)
+        entry["_size_mb"] = size_mb
+        table["codecs"].setdefault(name, {})[f"w{width}"] = {kind: entry}
+        speedup = best_mbps / max(default_mbps, 1e-9)
+        rows += [
+            (f"autotune/{name}/tuned_MBps", round(best_mbps, 3),
+             f"knobs={best}"),
+            (f"autotune/{name}/default_MBps", round(default_mbps, 3),
+             f"chunk_bytes={fmt.DEFAULT_CHUNK_BYTES}"),
+            (f"autotune/{name}/speedup", round(speedup, 3),
+             "tuned vs hand-picked"),
+            (f"autotune/{name}/chunk_bytes", int(best.get(
+                "chunk_bytes", fmt.DEFAULT_CHUNK_BYTES)), ""),
+        ]
+    n_better = sum(1 for n, v, _ in rows
+                   if n.endswith("/speedup") and v > 1.0)
+    rows.append(("autotune/codecs_improved", n_better,
+                 "codecs where tuned beats hand-picked"))
+    return table, rows
+
+
+def merge_tables(base: Dict[str, Any], new: Dict[str, Any]) -> Dict[str, Any]:
+    """Merge ``new`` entries into ``base`` at (codec, width, kind)
+    granularity — an autotune run on one device never clobbers another
+    device's committed entries."""
+    out = {"version": TABLE_VERSION,
+           "codecs": {c: {w: dict(kinds) for w, kinds in ws.items()}
+                      for c, ws in base.get("codecs", {}).items()}}
+    for c, ws in new.get("codecs", {}).items():
+        for w, kinds in ws.items():
+            out["codecs"].setdefault(c, {}).setdefault(w, {}).update(kinds)
+    return out

@@ -43,23 +43,28 @@ def unpack_tile(words: jnp.ndarray, start, n: int, bits: int) -> jnp.ndarray:
     return (lo | hi) & mask
 
 
-def _kernel(words_ref, out_ref, *, bits: int):
+def _kernel(words_ref, out_ref, *, bits: int, tile: int):
     j = pl.program_id(1)
-    out_ref[0, :] = unpack_tile(words_ref[0, :], j * TILE, TILE, bits)
+    out_ref[0, :] = unpack_tile(words_ref[0, :], j * tile, tile, bits)
 
 
-@functools.partial(jax.jit, static_argnames=("bits", "out_elems", "interpret"))
+@functools.partial(jax.jit, static_argnames=("bits", "out_elems", "interpret",
+                                             "tile"))
 def unpack_pallas(words: jnp.ndarray, *, bits: int, out_elems: int,
-                  interpret: bool = False) -> jnp.ndarray:
-    """words: (num_chunks, W) uint32 -> (num_chunks, out_elems) uint32."""
+                  interpret: bool = False, tile: int = TILE) -> jnp.ndarray:
+    """words: (num_chunks, W) uint32 -> (num_chunks, out_elems) uint32.
+
+    ``tile`` is the output-tile width (autotunable; default 16 VREGs) —
+    smaller tiles raise grid parallelism, larger ones amortize the per-cell
+    word-row DMA."""
     n, w = words.shape
-    tiles = (out_elems + TILE - 1) // TILE
-    padded = tiles * TILE
+    tiles = (out_elems + tile - 1) // tile
+    padded = tiles * tile
     out = pl.pallas_call(
-        functools.partial(_kernel, bits=bits),
+        functools.partial(_kernel, bits=bits, tile=tile),
         grid=(n, tiles),
         in_specs=[pl.BlockSpec((1, w), lambda i, j: (i, 0))],
-        out_specs=pl.BlockSpec((1, TILE), lambda i, j: (i, j)),
+        out_specs=pl.BlockSpec((1, tile), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((n, padded), jnp.uint32),
         interpret=interpret,
     )(words)
@@ -95,12 +100,15 @@ def _body_oracle(inputs, consts, out_len, *, chunk_elems, width, bits):
 
 
 def _pallas(body, inputs, consts, out_lens, *, chunk_elems, width, bits,
-            interpret):
+            interpret, tune=()):
     """Hand-tuned override: the output-tiled kernel above (16-VREG tiles)
-    instead of the harness's one-chunk-per-cell generic wrapper."""
+    instead of the harness's one-chunk-per-cell generic wrapper.  The tile
+    width is this codec's declared ``Tunable`` — the autotuner's winning
+    value (or an explicit override) arrives via the static ``tune``."""
     (words,) = inputs
+    tile = int(dict(tune).get("tile", TILE))
     out = unpack_pallas(words, bits=bits, out_elems=chunk_elems,
-                        interpret=interpret)
+                        interpret=interpret, tile=tile)
     return out.astype(harness.DEV_DTYPE[width])
 
 
@@ -118,6 +126,7 @@ CODEC = registry.register(registry.Codec(
         body_oracle=_body_oracle,
         chunk_inputs=harness.words_inputs,
         pallas_override=_pallas,
+        tunables=(harness.Tunable("tile", (512, 1024, 2048, 4096), TILE),),
     ),
     needs_words=True,
     shared_extras=("bitpack_bits",),

@@ -239,6 +239,23 @@ class Epilogue:
 BodyFn = Callable[..., jnp.ndarray]   # (inputs, consts, out_len, *, chunk_elems, width, bits)
 
 
+@dataclasses.dataclass(frozen=True)
+class Tunable:
+    """One kernel knob a codec exposes to the offline autotuner.
+
+    ``name`` must not collide with the framework's own knobs
+    (``core.tuning.KNOWN_KNOBS``); ``candidates`` is the value grid the
+    autotuner searches, ``default`` what the kernel uses when the tuned
+    table has no entry and the caller passed nothing.  Values reach the
+    codec's ``pallas_override`` (or the generic wrapper) through the static
+    ``tune`` tuple, so they are compile-time constants to the kernel.
+    """
+
+    name: str
+    candidates: Tuple[Any, ...]
+    default: Any
+
+
 def _default_inputs(dev: Dict[str, Any]) -> Tuple[jnp.ndarray, ...]:
     return (dev["comp"],)
 
@@ -273,6 +290,9 @@ class DecodeSpec:
     # codec-default Epilogue fused into every dispatch unless the caller
     # passes its own (``ops.decode(..., epilogue=)`` overrides).
     epilogue: Optional[Epilogue] = None
+    # kernel knobs this codec exposes to the offline autotuner
+    # (``core.tuning``); values arrive via the static ``tune`` tuple.
+    tunables: Tuple[Tunable, ...] = ()
 
     @classmethod
     def from_two_phase(cls, spec: TwoPhaseSpec,
@@ -299,12 +319,20 @@ class DecodeSpec:
 
 def run(spec: DecodeSpec, dev: Dict[str, Any], *, width: int,
         chunk_elems: int, backend: str, interpret: bool,
-        bits: int, epilogue: Optional[Epilogue] = None) -> jnp.ndarray:
+        bits: int, epilogue: Optional[Epilogue] = None,
+        tune: Tuple[Tuple[str, Any], ...] = ()) -> jnp.ndarray:
     """Decode every chunk of a device table through one DecodeSpec backend.
 
     ``epilogue`` (caller's, falling back to the spec's default) is applied
     to the chunk matrix inside the same computation — fused by XLA into the
-    dispatch, so no raw uint intermediate reaches the consumer."""
+    dispatch, so no raw uint intermediate reaches the consumer.
+
+    ``tune``: sorted ``((knob, value), ...)`` of kernel knobs — the generic
+    wrapper's ``num_stages`` plus any codec ``Tunable``s — resolved by the
+    caller (``core.tuning.kernel_tune``).  Static: new values are new
+    compilations.  Kernel knobs shape only the Pallas launch; the XLA /
+    scalar / oracle backends ignore them (the decoded values are knob-
+    independent by the conformance gate)."""
     inputs = spec.chunk_inputs(dev)
     consts = tuple(spec.consts())
     out_lens = dev["out_lens"]
@@ -313,7 +341,7 @@ def run(spec: DecodeSpec, dev: Dict[str, Any], *, width: int,
         kernel = spec.pallas_override or _generic_pallas
         out = kernel(spec.body, inputs, consts, out_lens,
                      chunk_elems=chunk_elems, width=width, bits=bits,
-                     interpret=interpret)
+                     interpret=interpret, tune=tune)
         return epilogue.apply(out, dev) if epilogue is not None else out
     body = {"xla": spec.body,
             "scalar": spec.body_scalar or spec.body,
@@ -330,12 +358,35 @@ def run(spec: DecodeSpec, dev: Dict[str, Any], *, width: int,
 
 def _generic_pallas(body: BodyFn, inputs, consts, out_lens, *,
                     chunk_elems: int, width: int, bits: int,
-                    interpret: bool) -> jnp.ndarray:
-    """The single generic ``pallas_call`` wrapper: grid = chunks, one chunk
-    per cell.  Per-chunk operands tile ``(1, row)`` (the HBM->VMEM DMA of
-    chunk i+1 double-buffers against the decode of chunk i); broadcast
-    constants replicate with a constant index map."""
+                    interpret: bool,
+                    tune: Tuple[Tuple[str, Any], ...] = ()) -> jnp.ndarray:
+    """The single generic ``pallas_call`` wrapper, pipelined.
+
+    Grid cell g decodes a *block* of ``num_stages`` consecutive chunks:
+    per-chunk operands tile ``(num_stages, row)``, so one HBM->VMEM DMA
+    brings the whole block in while the previous block is still decoding —
+    Pallas's grid-step double buffering, with the DMA granularity (and so
+    how much decode latency each transfer hides behind) exposed as the
+    ``num_stages`` tunable.  ``num_stages=1`` is the original chunk-per-cell
+    launch; broadcast constants replicate with a constant index map either
+    way.  Under ``interpret=True`` the knob falls back to the single-stage
+    path (the CPU validation grid stays exactly the hand-checked one)
+    unless the ``interpret_pipeline`` tune flag forces it — how the
+    conformance suite exercises the multi-stage body off-TPU.
+    """
+    knobs = dict(tune)
+    num_stages = int(knobs.get("num_stages", 1))
+    if interpret and not knobs.get("interpret_pipeline", 0):
+        num_stages = 1
     n = inputs[0].shape[0]
+    num_stages = max(1, min(num_stages, max(1, n)))
+    pad = -n % num_stages
+    if pad:
+        # zero rows decode to nothing (out_lens 0 -> every body exits
+        # immediately), same convention as the engine's block mode
+        inputs = tuple(jnp.pad(a, ((0, pad), (0, 0))) for a in inputs)
+        out_lens = jnp.pad(out_lens, (0, pad))
+    n_pad = n + pad
     n_in = len(inputs)
     consts2d = [jnp.asarray(c).reshape(1, -1) for c in consts]
 
@@ -343,20 +394,25 @@ def _generic_pallas(body: BodyFn, inputs, consts, out_lens, *,
         in_refs, lens_ref = refs[:n_in], refs[n_in]
         const_refs = refs[n_in + 1: n_in + 1 + len(consts2d)]
         out_ref = refs[-1]
-        rows = tuple(r[0, :] for r in in_refs)
         cs = tuple(r[0, :] for r in const_refs)
-        out_ref[0, :] = body(rows, cs, lens_ref[0, 0],
-                             chunk_elems=chunk_elems, width=width, bits=bits)
+        for s in range(num_stages):      # unrolled: static trip count
+            rows = tuple(r[s, :] for r in in_refs)
+            out_ref[s, :] = body(rows, cs, lens_ref[s, 0],
+                                 chunk_elems=chunk_elems, width=width,
+                                 bits=bits)
 
-    in_specs = [pl.BlockSpec((1, a.shape[1]), lambda i: (i, 0)) for a in inputs]
-    in_specs.append(pl.BlockSpec((1, 1), lambda i: (i, 0)))
+    in_specs = [pl.BlockSpec((num_stages, a.shape[1]), lambda i: (i, 0))
+                for a in inputs]
+    in_specs.append(pl.BlockSpec((num_stages, 1), lambda i: (i, 0)))
     in_specs += [pl.BlockSpec((1, c.shape[1]), lambda i: (0, 0))
                  for c in consts2d]
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kernel,
-        grid=(n,),
+        grid=(n_pad // num_stages,),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, chunk_elems), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((n, chunk_elems), DEV_DTYPE[width]),
+        out_specs=pl.BlockSpec((num_stages, chunk_elems), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, chunk_elems),
+                                       DEV_DTYPE[width]),
         interpret=interpret,
     )(*inputs, out_lens.reshape(-1, 1), *consts2d)
+    return out[:n] if pad else out

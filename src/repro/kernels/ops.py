@@ -35,13 +35,14 @@ BACKENDS = ("xla", "pallas", "oracle", "scalar")
 
 @functools.partial(jax.jit, static_argnames=("codec", "width", "chunk_elems",
                                              "backend", "interpret", "bits",
-                                             "epilogue"))
+                                             "epilogue", "tune"))
 def _decode_impl(dev: Dict[str, Any], *, codec: str, width: int,
                  chunk_elems: int, backend: str, interpret: bool,
-                 bits: int, epilogue) -> jax.Array:
+                 bits: int, epilogue, tune) -> jax.Array:
     return harness.run(registry.get(codec).decode, dev, width=width,
                        chunk_elems=chunk_elems, backend=backend,
-                       interpret=interpret, bits=bits, epilogue=epilogue)
+                       interpret=interpret, bits=bits, epilogue=epilogue,
+                       tune=tune)
 
 
 # Dispatch observers (``count_dispatches``).  A plain list-of-lists instead
@@ -55,13 +56,22 @@ _observers_lock = threading.Lock()
 
 def decode(dev: Dict[str, Any], *, codec: str, width: int, chunk_elems: int,
            backend: str = "xla", interpret: bool = True, bits: int = 0,
-           epilogue=None) -> jax.Array:
+           epilogue=None, tune=None) -> jax.Array:
     """Decode every chunk. Returns (num_chunks, chunk_elems) device array.
 
     ``epilogue``: optional ``harness.Epilogue`` fused into the dispatch
     (cast / widen / dequant applied before the matrix ever exists for the
     consumer); overrides the codec's registered default epilogue.
+
+    ``tune``: sorted kernel-knob tuple (jit-static; see ``core.tuning``).
+    ``None`` resolves the tuned defaults for ``(codec, width)`` on the
+    current device — callers that trace this function inside an outer jit
+    (the plan executors) must resolve and pass it explicitly instead, so a
+    swapped tuning table can never silently reuse a stale compilation.
     """
+    if tune is None:
+        from repro.core import tuning
+        tune = tuning.kernel_tune(codec, width)
     # Observer fan-out happens entirely under the lock: the old pattern
     # (truthiness check outside, iteration inside) was a TOCTOU — a context
     # registered between check and fan-out saw a dispatch-count of zero for
@@ -76,7 +86,8 @@ def decode(dev: Dict[str, Any], *, codec: str, width: int, chunk_elems: int,
                 calls.append(dict(rec))
     return _decode_impl(dev, codec=codec, width=width,
                         chunk_elems=chunk_elems, backend=backend,
-                        interpret=interpret, bits=bits, epilogue=epilogue)
+                        interpret=interpret, bits=bits, epilogue=epilogue,
+                        tune=tune)
 
 
 @contextlib.contextmanager

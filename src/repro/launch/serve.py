@@ -38,7 +38,17 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--compile-cache", nargs="?", const=True, default=None,
+                    metavar="DIR",
+                    help="persistent jit compilation cache (optional dir; "
+                         "default dir when given bare)")
     args = ap.parse_args()
+
+    if args.compile_cache:
+        from repro.core import tuning
+        path = tuning.enable_compile_cache(
+            None if args.compile_cache is True else args.compile_cache)
+        print(f"compile cache: {path}")
 
     base = get_arch(args.arch)
     cfg = {"tiny": reduced(base),

@@ -46,7 +46,17 @@ def main() -> None:
     ap.add_argument("--grad-int8", action="store_true")
     ap.add_argument("--compress-moments", action="store_true")
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--compile-cache", nargs="?", const=True, default=None,
+                    metavar="DIR",
+                    help="persistent jit compilation cache (optional dir; "
+                         "default dir when given bare)")
     args = ap.parse_args()
+
+    if args.compile_cache:
+        from repro.core import tuning
+        path = tuning.enable_compile_cache(
+            None if args.compile_cache is True else args.compile_cache)
+        print(f"compile cache: {path}")
 
     base = get_arch(args.arch)
     if args.preset == "tiny":
