@@ -49,21 +49,27 @@ def main() -> int:
             f"built-ins {sorted(set(fmt.CODECS) - names)} missing from registry")
 
     # fast-tier test matrix
+    def _diff(what: str, matrix: set) -> None:
+        """Name exactly which codecs a matrix is missing / has extra."""
+        missing, extra = names - matrix, matrix - names
+        if missing:
+            problems.append(f"{what}: missing codec(s) {sorted(missing)} "
+                            f"(parametrize over registry.names())")
+        if extra:
+            problems.append(f"{what}: unregistered codec(s) {sorted(extra)} "
+                            f"(register them or drop them from the matrix)")
+
     sys.path.insert(0, str(_ROOT / "tests"))
     try:
         import test_codecs
-        if set(test_codecs.ALL_CODECS) != names:
-            problems.append(
-                f"fast-tier matrix {sorted(test_codecs.ALL_CODECS)} missing codecs")
+        _diff("tests/test_codecs.py ALL_CODECS", set(test_codecs.ALL_CODECS))
     finally:
         sys.path.pop(0)
 
     # bench-smoke matrices
     from benchmarks import ablations, batched
     for mod in (batched, ablations):
-        matrix = set(mod.codec_matrix())
-        if matrix != names:
-            problems.append(f"{mod.__name__} matrix {sorted(matrix)} != registry")
+        _diff(f"{mod.__name__}.codec_matrix()", set(mod.codec_matrix()))
 
     # golden conformance vectors: every codec must commit fixtures
     vec_dir = _ROOT / "tests" / "vectors"

@@ -76,6 +76,8 @@ _PLUGINS: Dict[str, str] = {
     "tdeflate": "repro.kernels.tdeflate",
     "bitpack": "repro.kernels.bitpack",
     "dbp": "repro.kernels.dbp",
+    "huffman": "repro.kernels.huffman",
+    "lzss": "repro.kernels.lzss",
 }
 
 

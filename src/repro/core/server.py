@@ -79,7 +79,12 @@ class _LRUCache:
         return arr
 
     def put(self, key: str, arr: np.ndarray) -> None:
-        if arr.nbytes > self.max_bytes or key in self._entries:
+        if arr.nbytes > self.max_bytes:
+            return
+        if key in self._entries:
+            # content-keyed: the stored value is identical, but a re-put is
+            # a use — refresh recency so hot digests don't age out as cold.
+            self._entries.move_to_end(key)
             return
         stored = arr.copy()          # private copy: callers may mutate theirs
         stored.flags.writeable = False
@@ -307,18 +312,19 @@ class DecompressionService:
     def closed(self) -> bool:
         return self._closed
 
-    def close(self, timeout: Optional[float] = None) -> None:
+    def close(self, timeout: Optional[float] = None) -> bool:
         """Graceful shutdown: refuse new submits, drain every queued request
-        (all outstanding futures resolve), then join the worker."""
+        (all outstanding futures resolve), then join the worker.
+
+        Returns True once the worker has exited; False if the drain was
+        still running when ``timeout`` elapsed (the shutdown keeps
+        progressing in the background — call again to keep waiting)."""
         with self._lock:
-            if self._closed:
-                already = True
-            else:
-                already = False
+            if not self._closed:
                 self._closed = True
                 self._q.put(_CLOSE)
-        if not already:
-            self._worker.join(timeout)
+        self._worker.join(timeout)
+        return not self._worker.is_alive()
 
     def __enter__(self) -> "DecompressionService":
         return self

@@ -50,6 +50,7 @@ import json
 import os
 import threading
 import time
+import warnings
 from pathlib import Path
 from typing import Any, Dict, Iterable, Optional, Sequence, Tuple
 
@@ -251,8 +252,11 @@ def enable_compile_cache(path: Optional[os.PathLike] = None) -> Path:
         jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
         try:  # cache XLA-internal autotuning artifacts too, where supported
             jax.config.update("jax_persistent_cache_enable_xla_caches", "all")
-        except AttributeError:  # older jax: flag does not exist
-            pass
+        except AttributeError as e:  # older jax: flag does not exist
+            warnings.warn(
+                f"persistent compile cache: jax too old to cache "
+                f"XLA-internal artifacts ({e}); compiled decode kernels "
+                f"are still cached", RuntimeWarning, stacklevel=2)
         # jax initializes the persistent cache lazily at the FIRST compile
         # and never re-reads the config after that, so enabling it in a
         # process that already jitted something would silently do nothing.
@@ -262,8 +266,12 @@ def enable_compile_cache(path: Optional[os.PathLike] = None) -> Path:
             from jax.experimental.compilation_cache import (
                 compilation_cache as _cc)
             _cc.reset_cache()
-        except Exception:  # pragma: no cover - cache module moved/renamed
-            pass
+        except Exception as e:  # cache module moved/renamed
+            warnings.warn(
+                f"persistent compile cache at {p} could not be "
+                f"re-initialized ({type(e).__name__}: {e}); computations "
+                f"already jitted in this process may not be persisted",
+                RuntimeWarning, stacklevel=2)
         _cache_enabled_at = p
     return p
 

@@ -1,13 +1,17 @@
-"""Serving driver: batched prefill + cached decode.
+"""Serving driver: sequential per-token prefill + cached decode.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b \
         --preset tiny --batch 8 --prompt-len 64 --gen 32
 
 Demonstrates the inference path the decode_32k / long_500k dry-run shapes
-lower: a batch of requests is prefilled (full forward to populate the KV /
-recurrent-state cache), then decoded greedily one token per step.  Supports
-int8 KV-cache via --kv-int8 (the paper's bitpack/dequant technique applied
-to the serving data plane).
+lower: a batch of requests is prefilled into the KV / recurrent-state cache
+ONE TOKEN POSITION PER STEP (`prefill_into_cache` loops `decode_step` over
+the prompt — batched across requests, sequential over positions; a true
+multi-token prefill kernel would need cache-populating full-sequence
+forwards for every arch family), then decoded greedily one token per step.
+Prefill timings printed here are therefore per-token-loop numbers, not
+batched-prefill numbers.  Supports int8 KV-cache via --kv-int8 (the paper's
+bitpack/dequant technique applied to the serving data plane).
 """
 from __future__ import annotations
 
@@ -81,7 +85,8 @@ def main() -> None:
 
     gen = np.concatenate(out_tokens, axis=1)
     tok_s = args.batch * args.gen / t_decode
-    print(f"prefill: {args.batch}x{args.prompt_len} in {t_prefill:.2f}s")
+    print(f"prefill (per-token loop): {args.batch}x{args.prompt_len} "
+          f"in {t_prefill:.2f}s")
     print(f"decode:  {args.batch}x{args.gen} in {t_decode:.2f}s "
           f"({tok_s:.1f} tok/s)")
     print("sample tokens:", gen[0, :16].tolist())

@@ -1,8 +1,38 @@
 # NOTE: no XLA_FLAGS here — smoke tests must see 1 device (the dry-run
 # sets its own 512-device flag in its own process; multi-device tests
 # spawn subprocesses).
+import os
+
 import pytest
 
 
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running integration test")
+
+
+# Every jitted program stays resident in jax's in-process executable cache,
+# and each one is several small ORC-JIT code mappings.  A full single-process
+# run of this suite compiles enough decode kernels to exhaust the kernel's
+# vm.max_map_count (65530 by default) — mmap then fails inside LLVM mid-
+# compile and the process segfaults.  Dropping the caches once the map count
+# nears the ceiling costs a few recompiles and keeps the run alive.
+_MAP_GUARD = 40_000
+
+
+def _map_count() -> int:
+    try:
+        with open("/proc/self/maps") as f:
+            return sum(1 for _ in f)
+    except OSError:        # non-Linux: no map table, no map limit
+        return 0
+
+
+@pytest.fixture(autouse=True)
+def _bound_resident_executables():
+    if os.path.exists("/proc/self/maps") and _map_count() > _MAP_GUARD:
+        import gc
+
+        import jax
+        jax.clear_caches()
+        gc.collect()
+    yield

@@ -177,6 +177,47 @@ def test_close_drains_without_deadlock():
     svc.close()
 
 
+def test_lru_reput_refreshes_recency():
+    """Regression: re-putting a cached digest must count as a use.  The old
+    early-return left the entry at its original position, so a digest that
+    was decoded over and over could still be the first one evicted."""
+    a, b, c = (np.full(100, i, np.uint8) for i in range(3))
+    cache = srv._LRUCache(max_bytes=200)       # room for exactly two arrays
+    cache.put("a", a)
+    cache.put("b", b)
+    cache.put("a", a)                          # re-put == use: refresh a
+    cache.put("c", c)                          # budget forces one eviction
+    assert cache.get("b") is None              # b, not a, was LRU
+    assert np.array_equal(cache.get("a"), a)
+    assert np.array_equal(cache.get("c"), c)
+    assert cache.bytes == 200 and len(cache) == 2
+
+
+def test_close_timeout_reports_unfinished_drain(monkeypatch):
+    """Regression: ``close(timeout)`` never checked the worker actually
+    exited — a stuck drain looked like a clean shutdown.  It must return
+    False while the worker is still draining and True once it has joined
+    (a second call keeps waiting rather than no-opping)."""
+    arr = _runs_u32(400, seed=91)
+    blob = api.compress(arr, fmt.RLE_V2, chunk_bytes=512).blobs[0]
+    svc = srv.DecompressionService(max_delay_ms=1, idle_ms=1)
+    release = threading.Event()
+    orig = svc._process_window
+
+    def stalled(window):
+        release.wait(60)
+        orig(window)
+
+    monkeypatch.setattr(svc, "_process_window", stalled)
+    fut = svc.submit(blob)
+    assert svc.close(timeout=0.05) is False    # drain still running
+    assert svc._worker.is_alive()
+    release.set()
+    assert svc.close(timeout=60) is True       # re-close waits, then joins
+    assert not svc._worker.is_alive()
+    assert np.array_equal(fut.result(timeout=60), arr)
+
+
 def test_exception_propagates_through_future():
     good_arr = _runs_u32(600, seed=41)
     good = api.compress(good_arr, fmt.RLE_V2, chunk_bytes=512).blobs[0]

@@ -241,6 +241,34 @@ def test_compile_cache_across_processes(tmp_path):
     assert warm < cold, f"cached compile not faster ({warm=} {cold=})"
 
 
+def test_enable_compile_cache_warns_instead_of_swallowing(tmp_path):
+    """Regression: a failing ``reset_cache()`` (cache module moved/renamed)
+    used to pass silently — the user thought kernels were being persisted
+    when already-jitted computations were not.  It must warn with the cause
+    and still enable the cache for future compiles."""
+    import jax
+    from jax.experimental.compilation_cache import compilation_cache as _cc
+    before = jax.config.jax_compilation_cache_dir
+    orig_reset = _cc.reset_cache
+
+    def broken_reset():
+        raise RuntimeError("cache backend went away")
+
+    try:
+        _cc.reset_cache = broken_reset
+        with pytest.warns(RuntimeWarning,
+                          match="could not be re-initialized.*went away"):
+            p = tuning.enable_compile_cache(tmp_path / "c")
+        # the config-level enable still happened despite the failed reset
+        assert jax.config.jax_compilation_cache_dir == str(p)
+    finally:
+        _cc.reset_cache = orig_reset
+        jax.config.update("jax_compilation_cache_dir", before)
+        with tuning._lock:
+            tuning._cache_enabled_at = None
+        _cc.reset_cache()   # detach the tmp dir before it is deleted
+
+
 def test_enable_compile_cache_idempotent_and_midprocess(tmp_path):
     # by the time this test runs the process has jitted plenty — jax's
     # lazily-initialized cache would silently ignore a config-only enable,
