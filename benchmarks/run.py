@@ -19,6 +19,9 @@ Prints ``name,value,derived`` CSV rows:
   sharded.py          -> single- vs 8-virtual-device mesh decode
                          (execute_sharded) + per-device dispatch counts
                          (runs in a forced-device-count subprocess)
+  store.py            -> tiered-blob-store overlap efficiency: prefetch-
+                         streamed vs serial load-then-decode vs all-in-RAM,
+                         exactly-once paging + watermark eviction counts
 
 ``--all`` additionally writes one ``BENCH_<suite>.json`` per suite (shared
 schema ``{name, config, metrics, timestamp}`` — see
@@ -38,7 +41,7 @@ def build_suites(args) -> dict:
     """{suite: (config_dict, thunk)} — the thunk returns CSV rows."""
     from benchmarks import (ablations, autotune, batched, device_resident,
                             ratios, roofline_report, serving, sharded,
-                            throughput)
+                            store, throughput)
     size_mb = 0.05 if args.smoke else args.size_mb
     batched_cfg = ({"n_arrays": 8, "kb_per_array": 8, "iters": 1}
                    if args.smoke else
@@ -61,6 +64,11 @@ def build_suites(args) -> dict:
                     if args.smoke else
                     {"smoke": False, "size_mb": min(size_mb, 0.25),
                      "probe_kb": 16})
+    store_cfg = ({"n_leaves": 15, "kb_per_leaf": 128, "window": 3,
+                  "read_delay_ms": 6.0, "iters": 3}
+                 if args.smoke else
+                 {"n_leaves": 16, "kb_per_leaf": max(128, int(args.size_mb * 512)),
+                  "window": 4, "read_delay_ms": 5.0, "iters": 3})
     return {
         "throughput": ({"size_mb": size_mb},
                        lambda: throughput.run(size_mb)),
@@ -77,6 +85,7 @@ def build_suites(args) -> dict:
         "device": (device_cfg, lambda: device_resident.run(**device_cfg)),
         "sharded": (sharded_cfg, lambda: sharded.run(**sharded_cfg)),
         "autotune": (autotune_cfg, lambda: autotune.run(**autotune_cfg)),
+        "store": (store_cfg, lambda: store.run(**store_cfg)),
     }
 
 
@@ -86,7 +95,7 @@ def main() -> None:
                 help="per-dataset size; 0.25 keeps the full suite ~10 min on CPU")
     ap.add_argument("--only", default=None,
                     help="throughput|ablation_decode|ablation_unit|ratios|"
-                         "roofline|batched|serving|device|sharded|autotune")
+                         "roofline|batched|serving|device|sharded|autotune|store")
     ap.add_argument("--all", action="store_true",
                     help="write one BENCH_<suite>.json per suite "
                          "(shared schema) into --out-dir")

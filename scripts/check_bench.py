@@ -44,15 +44,18 @@ BASELINE_DIR = _ROOT / "benchmarks" / "baselines"
 DETERMINISTIC_RE = re.compile(
     r"^(ratio|symlen)/"
     r"|/(n_arrays|n_layers|n_requests|n_tenants|unique_blobs|ndev|groups"
-    r"|total_MB|served_MB|weight_MB|compression_ratio)$"
+    r"|total_MB|served_MB|weight_MB|compression_ratio|n_leaves|n_windows"
+    r"|comp_MB|over_budget|stream_fetches|pressure_evictions)$"
     r"|launches_per_restore|host_transfers_per_iter|host_bytes_per_iter")
 
 # Wall-clock-derived metrics, split by which direction is a regression.
 HIGHER_IS_BETTER_RE = re.compile(
     r"MBps|speedup|tok_s|over_single|over_block|geomean|hit_rate"
+    r"|overlap_frac"
     r"|flops_ratio|codecs_improved")
 LOWER_IS_BETTER_RE = re.compile(
-    r"_ms\b|_ms/|latency|amplification|seconds|_secs|_s$|/t_\w+_s$")
+    r"_ms\b|_ms/|latency|amplification|seconds|_secs|_s$|/t_\w+_s$"
+    r"|over_ram")
 
 
 def classify(name: str) -> str:

@@ -14,6 +14,8 @@
 from __future__ import annotations
 
 import json
+import pickle
+import re
 import shutil
 import threading
 from pathlib import Path
@@ -27,6 +29,7 @@ from repro.core import registry
 from repro.core.engine import CodagEngine, EngineConfig
 
 MANIFEST = "manifest.json"
+_STEP_RE = re.compile(r"step_(\d+)")
 
 
 def _flatten(tree) -> Dict[str, Any]:
@@ -60,7 +63,6 @@ def save(ckpt_dir: str, step: int, state, *, codec: str = "none",
             entry = {"file": fn, "dtype": str(arr.dtype),
                      "shape": list(arr.shape), "codec": "none"}
             if codec != "none" and arr.nbytes >= 1024:
-                import pickle
                 # byte-stream codecs take any dtype as raw bytes
                 ca = codec_api.compress(
                     arr.reshape(-1).view(np.uint8)
@@ -76,10 +78,13 @@ def save(ckpt_dir: str, step: int, state, *, codec: str = "none",
         if final.exists():
             shutil.rmtree(final)
         tmp.rename(final)                      # atomic publish
-        # retention
+        # retention: only prune steps STRICTLY OLDER than the one we just
+        # published — two overlapping async saves then cannot delete each
+        # other's newer checkpoint, whichever writer finishes last.
         steps = sorted(all_steps(ckpt_dir))
         for s in steps[:-keep]:
-            shutil.rmtree(root / f"step_{s}", ignore_errors=True)
+            if s < step:
+                shutil.rmtree(root / f"step_{s}", ignore_errors=True)
 
     if async_:
         t = threading.Thread(target=_write, daemon=True)
@@ -90,11 +95,18 @@ def save(ckpt_dir: str, step: int, state, *, codec: str = "none",
 
 
 def all_steps(ckpt_dir: str):
+    """Published step numbers.  Only exact ``step_<int>`` directories count;
+    foreign names that merely share the prefix (``step_final``, a stray
+    ``step_7.tmp``, files) are skipped instead of raising ``ValueError``."""
     root = Path(ckpt_dir)
     if not root.exists():
         return []
-    return [int(p.name.split("_")[1]) for p in root.glob("step_*")
-            if p.is_dir() and not p.name.endswith(".tmp")]
+    steps = []
+    for p in root.glob("step_*"):
+        m = _STEP_RE.fullmatch(p.name)
+        if m and p.is_dir():
+            steps.append(int(m.group(1)))
+    return steps
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:
@@ -102,10 +114,18 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def _load_blob(path):
+    """Load one compressed leaf (a pickled ``api.CompressedArray``).
+    Module-level so tests can instrument load-vs-decode ordering."""
+    with open(path, "rb") as f:
+        return pickle.load(f)
+
+
 def restore(ckpt_dir: str, step: int, like, *, shardings=None,
             engine: Optional[CodagEngine] = None,
             decode_window: Optional[int] = None,
-            service=None, device_out: bool = False):
+            service=None, device_out: bool = False,
+            store=None, prefetch_windows: int = 1):
     """Restore into the structure of ``like`` (a pytree of arrays or
     ShapeDtypeStructs).  ``shardings``: optional matching pytree of
     NamedShardings — the ELASTIC path: state saved on one mesh is re-laid
@@ -133,10 +153,24 @@ def restore(ckpt_dir: str, step: int, like, *, shardings=None,
     shardings' mesh (``DecodePlan.execute_sharded`` — each device decodes
     its share of the fused stream tables; no single-device decode
     bottleneck, zero ``transfers.to_host`` crossings), and each leaf is
-    committed under its requested ``NamedSharding``."""
+    committed under its requested ``NamedSharding``.
+
+    ``store``: a ``core.store.TieredBlobStore`` (e.g.
+    ``store.filesystem_store(ckpt_dir)``) to demand-page compressed leaves
+    through instead of reading blob files directly — the STREAMING restore:
+    while window i decodes (plan stage + dispatch), the store's pool is
+    prefetching window i+1..i+``prefetch_windows``'s blobs from disk/object
+    storage, and consumed windows are released back under the store's host
+    byte budget.  A checkpoint larger than host memory restores with
+    resident compressed bytes bounded by ~(1+``prefetch_windows``) windows
+    (``decode_window`` defaults to 8 on this path).  Without a store,
+    blob files are still loaded lazily PER WINDOW, so ``decode_window``
+    bounds peak host memory either way."""
     if engine is not None and service is not None:
         raise ValueError("pass engine= OR service=, not both: the service "
                          "decodes on its own engine")
+    if store is not None and decode_window is None:
+        decode_window = 8
     root = Path(ckpt_dir) / f"step_{step}"
     manifest = json.loads((root / MANIFEST).read_text())
     if service is None and not device_out:
@@ -149,51 +183,62 @@ def restore(ckpt_dir: str, step: int, like, *, shardings=None,
     flat_like, tdef = jax.tree_util.tree_flatten(like)
     keys = list(_flatten(like).keys())
 
-    # Two passes: load every compressed leaf's blob first, then decode them
-    # ALL through one batched plan (one engine dispatch per codec/width
-    # group — CODAG provisioning: a restore of N tensors is one saturated
-    # launch per group, not N under-provisioned ones).
+    # Decode compressed leaves window by window.  Each window's blobs are
+    # loaded LAZILY (read from disk — or demand-paged through the tiered
+    # store, which is prefetching the next window while this one decodes),
+    # decoded through one batched plan per codec/width group (CODAG
+    # provisioning), and committed into ``leaves`` before the next window's
+    # blobs materialize — peak extra host memory is ~one window of
+    # compressed + decoded bytes, not the whole checkpoint.
     leaves: list = [None] * len(keys)
     comp_idx: list = []
-    comp_cas: list = []
+    comp_files: list = []
     for i, key in enumerate(keys):
         entry = manifest["leaves"][key]
-        fn = root / entry["file"]
         if entry["codec"] != "none":
-            import pickle
-            with open(str(fn) + ".blob", "rb") as f:
-                comp_cas.append(pickle.load(f))
             comp_idx.append(i)
+            comp_files.append(entry["file"] + ".blob")
         else:
-            leaves[i] = np.load(fn)
-    w = decode_window or max(1, len(comp_cas))
-    decoded: list = []
-    for j in range(0, len(comp_cas), w):
+            leaves[i] = np.load(root / entry["file"])
+    w = decode_window or max(1, len(comp_files))
+    if store is not None:
+        prefix = f"step_{step}/"
+        window_iter = store.stream_windows(
+            [prefix + f for f in comp_files], window=w,
+            lookahead=max(0, prefetch_windows))
+    else:
+        def _lazy_windows():
+            for j in range(0, len(comp_files), w):
+                yield [_load_blob(root / f) for f in comp_files[j:j + w]]
+        window_iter = _lazy_windows()
+    if device_out:
+        from repro.core import format as fmt
+    pos = 0
+    for cas in window_iter:
+        idxs = comp_idx[pos:pos + len(cas)]
+        pos += len(cas)
         if service is not None:
-            decoded.extend(service.decode_arrays(comp_cas[j:j + w],
-                                                 device_out=device_out))
+            decoded = service.decode_arrays(cas, device_out=device_out)
         else:
-            decoded.extend(codec_api.decompress_many(comp_cas[j:j + w],
-                                                     engine,
-                                                     device_out=device_out,
-                                                     mesh=mesh))
+            decoded = codec_api.decompress_many(cas, engine,
+                                                device_out=device_out,
+                                                mesh=mesh)
+        for i, arr in zip(idxs, decoded):
+            entry = manifest["leaves"][keys[i]]
+            if device_out:
+                leaves[i] = fmt.device_view(arr.reshape(-1), entry["dtype"],
+                                            tuple(entry["shape"]))
+            else:
+                leaves[i] = (arr.reshape(-1).view(np.dtype(entry["dtype"]))
+                             .reshape(entry["shape"]))
     if device_out:
         import jax.numpy as jnp
 
-        from repro.core import format as fmt
-        for i, arr in zip(comp_idx, decoded):
-            entry = manifest["leaves"][keys[i]]
-            leaves[i] = fmt.device_view(arr.reshape(-1), entry["dtype"],
-                                        tuple(entry["shape"]))
         # uncompressed leaves upload once; the astype is a device op
         leaves = [jnp.asarray(leaf).astype(
                       np.dtype(manifest["leaves"][key]["dtype"]))
                   for key, leaf in zip(keys, leaves)]
     else:
-        for i, arr in zip(comp_idx, decoded):
-            entry = manifest["leaves"][keys[i]]
-            leaves[i] = (arr.reshape(-1).view(np.dtype(entry["dtype"]))
-                         .reshape(entry["shape"]))
         leaves = [leaf.astype(manifest["leaves"][key]["dtype"])
                   for key, leaf in zip(keys, leaves)]
     state = tdef.unflatten(leaves)

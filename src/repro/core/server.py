@@ -179,6 +179,14 @@ class DecompressionService:
                       per-device dispatch counts in ``ServiceStats``.  A
                       mesh of decompressors behind one submit queue; None
                       keeps the single default device.
+    store:            optional ``core.store.TieredBlobStore`` — the lower
+                      tiers behind this service's decoded-blob LRU (which
+                      becomes the store's TIER 0).  ``submit_key(key)``
+                      then resolves a request for a blob that is NOT in
+                      host memory by demand-paging it through the store's
+                      host-cache/backend tiers (on the store's prefetch
+                      pool — the service worker never blocks on I/O) and
+                      decoding on arrival; repeats hit the decoded cache.
     latency_window:   how many recent request latencies feed p50/p99.
     """
 
@@ -190,6 +198,7 @@ class DecompressionService:
                  bucket_cols_floor: Optional[int] = None,
                  compile_cache=None,
                  devices: Optional[Sequence] = None,
+                 store=None,
                  latency_window: int = 4096):
         if max_batch_blobs < 1:
             raise ValueError("max_batch_blobs must be >= 1")
@@ -215,6 +224,9 @@ class DecompressionService:
         self._cache = _LRUCache(cache_bytes) if cache_bytes > 0 else None
         self._latencies: "collections.deque[float]" = collections.deque(
             maxlen=latency_window)
+        self.store = store
+        if store is not None:
+            store.attach_tier0(self)   # store.stats() surfaces tier-0 LRU
         self._devices = list(devices) if devices else []
         self._rr = 0                       # round-robin device cursor
         self._device_dispatches: Dict[str, int] = {}
@@ -282,6 +294,45 @@ class DecompressionService:
 
         for f in futs:
             f.add_done_callback(_done)
+        return out
+
+    def submit_key(self, key: str, device_out: bool = False) -> Future:
+        """Enqueue a blob BY STORE KEY: a decoded-cache miss for bytes that
+        aren't even in host RAM resolves through the tiered store instead
+        of failing — the store demand-pages the compressed payload
+        (tier-1 host cache, else backend fetch on the store's pool), and
+        the decode is submitted the moment the payload lands.  The payload
+        may be a single ``CompressedBlob`` or a pickled
+        ``api.CompressedArray`` (plane blobs recombined).  Requires
+        ``store=`` at construction."""
+        if self.store is None:
+            raise RuntimeError("submit_key requires DecompressionService"
+                               "(store=...): no lower tiers to page from")
+        out: Future = Future()
+
+        def _paged(fut: Future) -> None:
+            try:
+                obj = fut.result()
+            except BaseException as e:     # missing key / corrupt payload
+                out.set_exception(e)
+                return
+            try:
+                inner = (self.submit_array(obj, device_out=device_out)
+                         if hasattr(obj, "blobs")
+                         else self.submit(obj, device_out=device_out))
+            except BaseException as e:     # service closed, bad payload
+                out.set_exception(e)
+                return
+
+            def _done(f: Future) -> None:
+                try:
+                    out.set_result(f.result())
+                except BaseException as e:
+                    out.set_exception(e)
+
+            inner.add_done_callback(_done)
+
+        self.store.fetch_async(key).add_done_callback(_paged)
         return out
 
     def decode(self, blob: fmt.CompressedBlob, device_out: bool = False):

@@ -25,6 +25,7 @@ import numpy as np
 from repro.core import batch as cbatch
 from repro.core import encoders as enc
 from repro.core import format as fmt
+from repro.core import store as blobstore
 from repro.core.engine import CodagEngine, EngineConfig
 from repro.core.server import DecompressionService
 
@@ -46,26 +47,99 @@ def synthetic_corpus(n_tokens: int, vocab: int, seed: int = 0,
 
 
 class CompressedTokenStore:
-    """In-memory (or disk-backed) store of codec-compressed token shards."""
+    """Store of codec-compressed token shards: in-memory, or spilled to a
+    ``core.store.TieredBlobStore`` (``build(spill_dir=...)``) and
+    demand-paged back with lookahead prefetch — a corpus larger than host
+    RAM streams through a bounded compressed-shard cache."""
 
-    def __init__(self, blobs: List[fmt.CompressedBlob], vocab: int):
+    def __init__(self, blobs: List[fmt.CompressedBlob], vocab: int, *,
+                 store: Optional[blobstore.TieredBlobStore] = None,
+                 keys: Optional[List[str]] = None,
+                 shard_meta: Optional[List[tuple]] = None):
         self.blobs = blobs
         self.vocab = vocab
+        self._store = store
+        self._keys = list(keys or [])
+        # (compressed_bytes, uncompressed_bytes) per spilled shard, so
+        # ratio/accounting never page anything back in
+        self._meta = list(shard_meta or [])
 
     @classmethod
     def build(cls, tokens: np.ndarray, vocab: int,
               shard_tokens: int = 1 << 20,
               codec: str = fmt.RLE_V2,
-              chunk_bytes: int = 64 * 1024) -> "CompressedTokenStore":
-        shards = [tokens[i:i + shard_tokens].astype(np.uint32)
-                  for i in range(0, len(tokens), shard_tokens)]
-        blobs = [enc.compress(s, codec, chunk_bytes) for s in shards]
-        return cls(blobs, vocab)
+              chunk_bytes: int = 64 * 1024,
+              spill_dir: Optional[str] = None,
+              host_budget_bytes: int = 64 << 20,
+              prefetch_workers: int = 4) -> "CompressedTokenStore":
+        """``spill_dir=None`` keeps every compressed shard in host RAM.
+        With a ``spill_dir``, shards are written through a
+        ``TieredBlobStore`` (atomic one-file-per-shard) and the store
+        demand-pages them back on access, keeping at most
+        ``host_budget_bytes`` of compressed shards resident."""
+        shard_arrays = (tokens[i:i + shard_tokens].astype(np.uint32)
+                        for i in range(0, len(tokens), shard_tokens))
+        if spill_dir is None:
+            return cls([enc.compress(s, codec, chunk_bytes)
+                        for s in shard_arrays], vocab)
+        st = blobstore.filesystem_store(
+            spill_dir, host_budget_bytes=host_budget_bytes,
+            prefetch_workers=prefetch_workers)
+        keys, meta = [], []
+        for si, s in enumerate(shard_arrays):
+            b = enc.compress(s, codec, chunk_bytes)
+            key = f"shard_{si:06d}.blob"
+            st.put(key, b)               # write-through; not cached (admit
+            keys.append(key)             # happens on first read access)
+            meta.append((b.compressed_bytes, b.uncompressed_bytes))
+        return cls([], vocab, store=st, keys=keys, shard_meta=meta)
+
+    @property
+    def spilled(self) -> bool:
+        return self._store is not None
+
+    @property
+    def store(self) -> Optional[blobstore.TieredBlobStore]:
+        """The backing ``TieredBlobStore`` (spilled mode only)."""
+        return self._store
+
+    @property
+    def num_shards(self) -> int:
+        return len(self._keys) if self.spilled else len(self.blobs)
+
+    def blob(self, i: int) -> fmt.CompressedBlob:
+        """Shard ``i``'s compressed blob; demand-paged in spilled mode."""
+        if self.spilled:
+            return self._store.get(self._keys[i])
+        return self.blobs[i]
+
+    def prefetch_shards(self, lo: int, hi: int) -> None:
+        """Async lookahead: schedule shards ``[lo, hi)`` for paging-in
+        (no-op for the in-memory store)."""
+        if self.spilled:
+            self._store.prefetch(self._keys[max(0, lo):hi])
+
+    def _blob_windows(self, window: int,
+                      lookahead: int = 1) -> Iterator[List[fmt.CompressedBlob]]:
+        """Shard blobs in windows; spilled mode overlaps the next window's
+        paging with the consumer's decode of the current one
+        (``TieredBlobStore.stream_windows``) and releases consumed windows
+        back under the host budget."""
+        if not self.spilled:
+            for i in range(0, len(self.blobs), window):
+                yield self.blobs[i:i + window]
+            return
+        yield from self._store.stream_windows(self._keys, window=window,
+                                              lookahead=lookahead)
 
     @property
     def ratio(self) -> float:
-        c = sum(b.compressed_bytes for b in self.blobs)
-        u = sum(b.uncompressed_bytes for b in self.blobs)
+        if self.spilled:
+            c = sum(m[0] for m in self._meta)
+            u = sum(m[1] for m in self._meta)
+        else:
+            c = sum(b.compressed_bytes for b in self.blobs)
+            u = sum(b.uncompressed_bytes for b in self.blobs)
         return c / max(1, u)
 
     def decoded_shards(self, engine: CodagEngine, window: int = 1,
@@ -96,9 +170,9 @@ class CompressedTokenStore:
             cast = lambda a: a.astype(jnp.int32)
         else:
             cast = lambda a: a.astype(np.int32)
-        for i in range(0, len(self.blobs), max(1, window)):
+        for blobs in self._blob_windows(max(1, window)):
             for out in cbatch.decompress_blobs(
-                    self.blobs[i:i + max(1, window)], engine,
+                    blobs, engine,
                     device_out=device_out, mesh=mesh, out_shardings=out_sh):
                 yield cast(out)
 
@@ -113,16 +187,23 @@ class CompressedTokenStore:
         thread.  ``device_out=True`` serves device-resident shards."""
         cast = (lambda a: a.astype(jnp.int32)) if device_out \
             else (lambda a: a.astype(np.int32))
+        n = self.num_shards
+        look = max(1, lookahead)
         futs: "collections.deque" = collections.deque()
         idx = 0
-        while idx < len(self.blobs) and len(futs) < max(1, lookahead):
-            futs.append(service.submit(self.blobs[idx],
+        self.prefetch_shards(0, look)      # prime the paging pipeline
+        while idx < n and len(futs) < look:
+            self.prefetch_shards(idx + 1, idx + 1 + look)
+            futs.append(service.submit(self.blob(idx),
                                        device_out=device_out))
             idx += 1
         while futs:
             out = futs.popleft().result()
-            if idx < len(self.blobs):
-                futs.append(service.submit(self.blobs[idx],
+            if idx < n:
+                # shard idx pages in (hit — its fetch was issued a step
+                # ago) while idx+1..idx+look stream in behind it
+                self.prefetch_shards(idx + 1, idx + 1 + look)
+                futs.append(service.submit(self.blob(idx),
                                            device_out=device_out))
                 idx += 1
             yield cast(out)
@@ -190,14 +271,32 @@ class CompressedLoader:
                         device_out=self.device_out, mesh=self.mesh)
 
         src = shard_iter()
+        t = None
+        stop = threading.Event()
         if self.prefetch and self.service is None:
             q: "queue.Queue" = queue.Queue(maxsize=2)
 
             def worker():
-                for s in src:
-                    q.put(s)
+                # Bounded-timeout puts + a stop flag: when the consumer
+                # drops the iterator, the worker exits within one timeout
+                # instead of blocking on q.put forever holding a decoded
+                # shard (the old leak — one zombie thread per dropped
+                # iterator).  Stop is also checked before each decode so
+                # shutdown never waits on another shard's dispatch.
+                while not stop.is_set():
+                    try:
+                        s = next(src)
+                    except StopIteration:
+                        return
+                    while not stop.is_set():
+                        try:
+                            q.put(s, timeout=0.05)
+                            break
+                        except queue.Full:
+                            continue
 
-            t = threading.Thread(target=worker, daemon=True)
+            t = threading.Thread(target=worker, daemon=True,
+                                 name="codag-loader-prefetch")
             t.start()
             get = q.get
         else:
@@ -205,11 +304,26 @@ class CompressedLoader:
             # consumer — no ad-hoc prefetch thread needed.
             get = lambda: next(src)
 
-        while True:
-            while len(buf) < need:
-                buf = xp.concatenate([buf, get()])
-            flat = buf[:need]
-            buf = buf[need - 1:]
-            toks = flat[:-1].reshape(self.batch, self.seq) % self.store.vocab
-            labs = flat[1:].reshape(self.batch, self.seq) % self.store.vocab
-            yield {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labs)}
+        try:
+            while True:
+                while len(buf) < need:
+                    buf = xp.concatenate([buf, get()])
+                flat = buf[:need]
+                buf = buf[need - 1:]
+                toks = (flat[:-1].reshape(self.batch, self.seq)
+                        % self.store.vocab)
+                labs = (flat[1:].reshape(self.batch, self.seq)
+                        % self.store.vocab)
+                yield {"tokens": jnp.asarray(toks),
+                       "labels": jnp.asarray(labs)}
+        finally:
+            # runs on generator close/GC as well as break/throw: shut the
+            # prefetch worker down so no thread outlives its iterator
+            if t is not None:
+                stop.set()
+                try:
+                    while True:
+                        q.get_nowait()       # unblock a mid-put worker
+                except queue.Empty:
+                    pass
+                t.join(timeout=5.0)

@@ -1,0 +1,407 @@
+"""Tiered blob store: promotion/demotion across tiers, watermark eviction,
+prefetch-overlap ordering, crash/partial-file handling, streaming restore
+bit-exactness, and regressions for the lazy-restore / loader-thread /
+retention fixes."""
+import gc
+import pickle
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.core import api, registry
+from repro.core import store as bs
+from repro.core.engine import CodagEngine, EngineConfig
+from repro.data import pipeline
+
+
+def _put_objs(backend, n, nbytes=2000):
+    st = bs.TieredBlobStore(backend)
+    keys = [f"k{i:03d}" for i in range(n)]
+    objs = {k: np.full(nbytes // 8, i, np.int64) for i, k in enumerate(keys)}
+    sizes = {k: st.put(k, objs[k]) for k in keys}
+    st.close()
+    return keys, objs, sizes
+
+
+class GatedBackend(bs.MemoryBackend):
+    """Backend whose ``get`` blocks on a per-key Event and records the
+    order fetches START — the prefetch-ordering probes."""
+
+    def __init__(self):
+        super().__init__()
+        self.gates = {}
+        self.started = []
+        self._order_lock = threading.Lock()
+
+    def gate(self, key):
+        self.gates[key] = threading.Event()
+        return self.gates[key]
+
+    def get(self, key):
+        with self._order_lock:
+            self.started.append(key)
+        ev = self.gates.get(key)
+        if ev is not None and not ev.wait(timeout=30):
+            raise TimeoutError(key)
+        return super().get(key)
+
+
+# ---------------------------------------------------------------- tiers
+
+
+def test_promotion_and_release_demotion():
+    """miss -> backend fetch promotes into tier 1; release demotes (the
+    payload stays only in tier 2 and pages back in on the next get)."""
+    be = bs.MemoryBackend()
+    keys, objs, _ = _put_objs(be, 3)
+    with bs.TieredBlobStore(be) as st:
+        assert not st.resident(keys[0])
+        got = st.get(keys[0])                       # tier-2 -> tier-1
+        np.testing.assert_array_equal(got, objs[keys[0]])
+        assert st.resident(keys[0])
+        assert st.get(keys[0]) is got               # tier-1 hit, same object
+        s = st.stats()
+        assert (s.host_hits, s.host_misses, s.backend_fetches) == (1, 1, 1)
+
+        st.release([keys[0]])
+        assert not st.resident(keys[0])
+        np.testing.assert_array_equal(st.get(keys[0]), objs[keys[0]])
+        s = st.stats()
+        assert s.backend_fetches == 2 and s.host_released == 1
+
+
+def test_tier0_decoded_cache_via_service():
+    """submit_key pages the compressed blob through the store and decodes
+    it; a second submit of the same key hits the service's decoded cache
+    (tier 0) — both tiers' counters surface in store.stats()."""
+    from repro.core.server import DecompressionService
+
+    be = bs.MemoryBackend()
+    arr = np.repeat(np.arange(64, dtype=np.int32), 50)
+    ca = api.compress(arr, "rle_v2", chunk_bytes=2048)
+    w = bs.TieredBlobStore(be)
+    w.put("blob0", ca)
+    w.close()
+
+    st = bs.TieredBlobStore(be)
+    with DecompressionService(CodagEngine(EngineConfig()),
+                              cache_bytes=1 << 20, store=st) as svc:
+        np.testing.assert_array_equal(
+            svc.submit_key("blob0").result(timeout=60), arr)
+        np.testing.assert_array_equal(
+            svc.submit_key("blob0").result(timeout=60), arr)
+        s = st.stats()
+        assert s.decoded_hits == 1 and s.decoded_misses >= 1
+        assert s.backend_fetches == 1
+    st.close()
+
+
+def test_watermark_eviction_hysteresis():
+    """Admitting past the high mark evicts LRU entries down to the LOW
+    mark in one burst — not one-out-one-in churn at the boundary."""
+    be = bs.MemoryBackend()
+    keys, _, sizes = _put_objs(be, 10)
+    per = next(iter(sizes.values()))
+    with bs.TieredBlobStore(be, host_budget_bytes=5 * per + per // 2,
+                            low_watermark=0.5) as st:
+        for k in keys[:5]:                     # fills to 5*per < budget
+            st.get(k)
+        assert st.stats().host_evictions == 0
+        st.get(keys[5])                        # crosses the high mark
+        s = st.stats()
+        # evicted down to <= 0.5 * budget ~ 2.75*per -> 2 entries survive
+        assert s.host_evictions == 4
+        assert s.host_bytes <= int(0.5 * (5 * per + per // 2))
+        # the just-admitted entry is never the victim
+        assert st.resident(keys[5])
+        # LRU order: the oldest were evicted, the newest kept
+        assert not st.resident(keys[0]) and st.resident(keys[4])
+
+
+def test_oversized_entry_still_admitted():
+    """A blob bigger than the whole budget must still page in (the
+    consumer needs it) — it is the one case resident bytes exceed the
+    budget, and it never double-fetches."""
+    be = bs.MemoryBackend()
+    keys, objs, sizes = _put_objs(be, 2, nbytes=4000)
+    with bs.TieredBlobStore(be, host_budget_bytes=100) as st:
+        np.testing.assert_array_equal(st.get(keys[0]), objs[keys[0]])
+        np.testing.assert_array_equal(st.get(keys[0]), objs[keys[0]])
+        s = st.stats()
+        assert s.backend_fetches == 1 and s.host_hits == 1
+
+
+def test_prefetch_join_counts_one_fetch():
+    """get() joining an in-flight prefetch counts as a hit: the page was
+    already on its way in, no second backend read."""
+    be = GatedBackend()
+    keys, objs, _ = _put_objs(be, 1)
+    ev = be.gate(keys[0])
+    with bs.TieredBlobStore(be) as st:
+        st.prefetch([keys[0]])
+        time.sleep(0.05)                       # fetch is parked on the gate
+        assert st.stats().inflight_fetches == 1
+        ev.set()
+        np.testing.assert_array_equal(st.get(keys[0]), objs[keys[0]])
+        s = st.stats()
+        assert s.backend_fetches == 1
+        assert s.host_hits == 1 and s.host_misses == 1
+
+
+# ------------------------------------------------- overlap loop ordering
+
+
+def test_stream_windows_never_waits_on_window_i_plus_2():
+    """lookahead=1 touches nothing beyond window i+1: windows 0 and 1
+    must yield while window 2's backend read is BLOCKED forever."""
+    be = GatedBackend()
+    keys, objs, _ = _put_objs(be, 6)
+    gates = [be.gate(k) for k in keys[4:6]]    # window 2 is gated shut
+    with bs.TieredBlobStore(be) as st:
+        it = st.stream_windows(keys, window=2, lookahead=1)
+        w0 = next(it)
+        w1 = next(it)                          # must NOT block
+        np.testing.assert_array_equal(w0[0], objs[keys[0]])
+        np.testing.assert_array_equal(w1[1], objs[keys[3]])
+        # window 2's fetches may have STARTED (its prefetch was issued at
+        # window 1's yield) but nothing joined them
+        for g in gates:
+            g.set()
+        w2 = next(it)
+        np.testing.assert_array_equal(w2[0], objs[keys[4]])
+        with pytest.raises(StopIteration):
+            next(it)
+
+
+def test_stream_windows_prefetch_depth_and_order():
+    """Fetches start in window order and never run more than lookahead
+    windows ahead of consumption."""
+    be = GatedBackend()
+    keys, _, _ = _put_objs(be, 8)
+    with bs.TieredBlobStore(be) as st:
+        it = st.stream_windows(keys, window=2, lookahead=1)
+        next(it)
+        time.sleep(0.05)
+        # after yielding window 0, only windows 0 and 1 may have started
+        assert set(be.started) <= set(keys[:4])
+        list(it)
+        assert sorted(be.started) == keys      # each exactly once
+        s = st.stats()
+        assert s.backend_fetches == len(keys)
+
+
+def test_stream_windows_exactly_once_and_bounded():
+    """Budget >= (1+lookahead) windows: each key fetched exactly once,
+    consumed windows released, residency bounded."""
+    be = bs.MemoryBackend()
+    keys, objs, sizes = _put_objs(be, 8)
+    win_bytes = 2 * next(iter(sizes.values()))
+    with bs.TieredBlobStore(be, host_budget_bytes=2 * win_bytes + 64) as st:
+        for i, w in enumerate(st.stream_windows(keys, window=2)):
+            np.testing.assert_array_equal(w[0], objs[keys[2 * i]])
+            assert st.stats().host_bytes <= 2 * win_bytes + 64
+        s = st.stats()
+        assert s.backend_fetches == len(keys)
+        assert s.host_released == len(keys)
+        assert s.host_bytes == 0
+
+
+def test_stream_windows_serial_when_lookahead_zero():
+    """lookahead=0 issues no prefetch at all: every read starts only when
+    its own window's get runs (the serial baseline the benchmark times)."""
+    be = GatedBackend()
+    keys, _, _ = _put_objs(be, 4)
+    with bs.TieredBlobStore(be) as st:
+        it = st.stream_windows(keys, window=2, lookahead=0)
+        next(it)
+        time.sleep(0.05)
+        assert set(be.started) == set(keys[:2])
+
+
+# ------------------------------------------- backend crash / bad payloads
+
+
+def test_filesystem_backend_partial_file_and_corrupt_payload(tmp_path):
+    be = bs.FilesystemBackend(tmp_path)
+    be.put("good", pickle.dumps({"x": 1}))
+    # a crash mid-put leaves only the .tmp — invisible to every read path
+    (tmp_path / "crashed.tmp").write_bytes(b"partial garbage")
+    assert be.list_keys() == ["good"]
+    with pytest.raises(bs.BlobMissing):
+        be.get("crashed")
+    # a complete file with a corrupt payload surfaces as StoreError
+    be.put("corrupt", b"\x80\x05 not a pickle")
+    with bs.TieredBlobStore(be) as st:
+        assert st.get("good") == {"x": 1}
+        with pytest.raises(bs.StoreError):
+            st.get("corrupt")
+        with pytest.raises(bs.BlobMissing):
+            st.get("never_written")
+
+
+def test_filesystem_backend_put_is_atomic_and_keys_sandboxed(tmp_path):
+    be = bs.FilesystemBackend(tmp_path)
+    be.put("a/b/c", b"payload")
+    assert be.get("a/b/c") == b"payload"
+    assert be.size("a/b/c") == 7
+    be.put("a/b/c", b"replaced")               # overwrite is also atomic
+    assert be.get("a/b/c") == b"replaced"
+    assert not list(tmp_path.rglob("*.tmp"))   # no debris after puts
+    with pytest.raises(bs.StoreError):
+        be.get("../../etc/passwd")
+
+
+def test_prefetch_failure_surfaces_on_get():
+    be = bs.MemoryBackend()
+    with bs.TieredBlobStore(be) as st:
+        st.prefetch(["ghost"])
+        with pytest.raises(bs.BlobMissing):
+            st.get("ghost")
+
+
+# -------------------------------------------- streaming restore (ckpt)
+
+
+@pytest.mark.parametrize("codec", registry.names())
+def test_streaming_restore_bit_exact_every_codec(tmp_path, codec):
+    """restore(store=) window-streams each codec's checkpoint bit-exactly
+    vs the plain in-RAM restore."""
+    rng = np.random.default_rng(3)
+    c = registry.get(codec)
+    s = {"a": jnp.asarray(c.demo_data(4096, rng)),
+         "b": jnp.asarray(c.demo_data(2048, rng)),
+         "small": jnp.arange(7, dtype=jnp.int32)}   # stays uncompressed
+    ckpt.save(str(tmp_path), 1, s, codec=codec)
+    plain = ckpt.restore(str(tmp_path), 1, s)
+    with bs.filesystem_store(tmp_path, host_budget_bytes=1 << 20) as st:
+        streamed = ckpt.restore(str(tmp_path), 1, s, store=st,
+                                decode_window=1)
+        assert st.stats().backend_fetches >= 1     # it really paged
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), plain, streamed)
+
+
+def test_streaming_restore_exceeds_host_budget(tmp_path):
+    """A checkpoint larger than the store's host budget restores anyway —
+    windows page in, decode, and release under the watermark."""
+    s = {f"l{i}": jnp.asarray(np.repeat(np.arange(80, dtype=np.int32), 40))
+         for i in range(6)}
+    ckpt.save(str(tmp_path), 2, s, codec="rle_v2")
+    blob_bytes = sum(p.stat().st_size
+                     for p in (tmp_path / "step_2").glob("*.blob"))
+    with bs.filesystem_store(tmp_path,
+                             host_budget_bytes=blob_bytes // 2) as st:
+        got = ckpt.restore(str(tmp_path), 2, s, store=st, decode_window=2)
+        stats = st.stats()
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), s, got)
+    assert stats.backend_fetches == 6
+    # every entry was demoted — by release (consumed windows) or by the
+    # watermark racing ahead of it under the halved budget
+    assert stats.host_released + stats.host_evictions == 6
+    assert stats.host_bytes == 0 and stats.host_entries == 0
+
+
+# ------------------------------------------------------- regressions
+
+
+def test_restore_loads_blobs_lazily_per_window(tmp_path, monkeypatch):
+    """Regression: restore used to read EVERY compressed blob into host
+    RAM before the first decode; now loads interleave with decode windows
+    even without a store."""
+    s = {f"l{i}": jnp.asarray(np.repeat(np.arange(50, dtype=np.int32), 40))
+         for i in range(6)}
+    ckpt.save(str(tmp_path), 1, s, codec="rle_v2")
+
+    events = []
+    real_load = ckpt._load_blob
+    monkeypatch.setattr(ckpt, "_load_blob",
+                        lambda p: (events.append("load"), real_load(p))[1])
+    real_many = api.decompress_many
+
+    def spy_many(cas, *a, **kw):
+        events.append("decode")
+        return real_many(cas, *a, **kw)
+
+    monkeypatch.setattr(api, "decompress_many", spy_many)
+    got = ckpt.restore(str(tmp_path), 1, s, decode_window=2)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), s, got)
+    # 3 windows of 2: load,load,decode repeated — NOT all 6 loads up front
+    first_decode = events.index("decode")
+    assert events.count("load") == 6 and events.count("decode") == 3
+    assert sum(1 for e in events[:first_decode] if e == "load") == 2
+
+
+def test_loader_iterator_dropped_without_leaking_thread():
+    """Regression: dropping a prefetching CompressedLoader iterator used to
+    leave its daemon worker blocked on q.put forever."""
+    toks = pipeline.synthetic_corpus(1 << 14, vocab=500, seed=5)
+    store = pipeline.CompressedTokenStore.build(
+        toks, 500, shard_tokens=1 << 12, chunk_bytes=2048)
+    loader = pipeline.CompressedLoader(store, batch=2, seq=32, prefetch=True)
+    it = iter(loader)
+    next(it)                                   # worker is now running
+    it.close()                                 # generator finalization path
+    del it
+    gc.collect()
+    deadline = time.time() + 5
+    while time.time() < deadline:
+        leaked = [t for t in threading.enumerate()
+                  if t.name.startswith("codag-loader-prefetch") and
+                  t.is_alive()]
+        if not leaked:
+            break
+        time.sleep(0.05)
+    assert not leaked, f"prefetch worker leaked: {leaked}"
+
+
+def test_all_steps_ignores_foreign_names(tmp_path):
+    s = {"w": jnp.ones((512,), jnp.float32)}
+    ckpt.save(str(tmp_path), 3, s)
+    (tmp_path / "step_final").mkdir()          # foreign dir
+    (tmp_path / "step_7.tmp").mkdir()          # crashed save debris
+    (tmp_path / "step_9").write_text("a file, not a checkpoint")
+    assert ckpt.all_steps(str(tmp_path)) == [3]
+    assert ckpt.latest_step(str(tmp_path)) == 3
+
+
+def test_retention_never_deletes_newer_steps(tmp_path):
+    """Regression: an overlapped (slow) save of an OLDER step finishing
+    last must not retire the newer checkpoint that published meanwhile."""
+    s = {"w": jnp.ones((512,), jnp.float32)}
+    for step in (10, 11, 12):
+        ckpt.save(str(tmp_path), step, s, keep=2)
+    assert sorted(ckpt.all_steps(str(tmp_path))) == [11, 12]
+    # a stale writer for step 5 lands after 11/12 exist; keep=1 would have
+    # wiped everything but itself under the old "keep newest" rule
+    ckpt.save(str(tmp_path), 5, s, keep=1)
+    steps = sorted(ckpt.all_steps(str(tmp_path)))
+    assert 12 in steps and 11 in steps
+
+
+# ----------------------------------------------- spill-dir token store
+
+
+def test_token_store_spill_dir_bit_exact(tmp_path):
+    toks = pipeline.synthetic_corpus(1 << 14, vocab=700, seed=2)
+    in_mem = pipeline.CompressedTokenStore.build(
+        toks, 700, shard_tokens=1 << 12, chunk_bytes=2048)
+    spilled = pipeline.CompressedTokenStore.build(
+        toks, 700, shard_tokens=1 << 12, chunk_bytes=2048,
+        spill_dir=tmp_path, host_budget_bytes=1 << 16)
+    assert spilled.spilled and not in_mem.spilled
+    assert spilled.num_shards == in_mem.num_shards
+    assert abs(spilled.ratio - in_mem.ratio) < 1e-9
+    eng = CodagEngine(EngineConfig())
+    a = np.concatenate([x.reshape(-1) for x in in_mem.decoded_shards(eng)])
+    b = np.concatenate([x.reshape(-1)
+                        for x in spilled.decoded_shards(eng, window=2)])
+    np.testing.assert_array_equal(a, b)
+    s = spilled.store.stats()
+    assert s.backend_fetches == spilled.num_shards   # demand-paged once
