@@ -39,9 +39,9 @@ from pathlib import Path
 
 def build_suites(args) -> dict:
     """{suite: (config_dict, thunk)} — the thunk returns CSV rows."""
-    from benchmarks import (ablations, autotune, batched, device_resident,
-                            ratios, roofline_report, serving, sharded,
-                            store, throughput)
+    from benchmarks import (ablations, autotune, batched, collectives,
+                            device_resident, ratios, roofline_report,
+                            serving, sharded, store, throughput)
     size_mb = 0.05 if args.smoke else args.size_mb
     batched_cfg = ({"n_arrays": 8, "kb_per_array": 8, "iters": 1}
                    if args.smoke else
@@ -69,6 +69,11 @@ def build_suites(args) -> dict:
                  if args.smoke else
                  {"n_leaves": 16, "kb_per_leaf": max(128, int(args.size_mb * 512)),
                   "window": 4, "read_delay_ms": 5.0, "iters": 3})
+    collectives_cfg = ({"steps": 12, "outer_every": 4, "batch": 2,
+                        "seq": 64, "link_rtt_ms": 40.0, "topk_frac": 0.01}
+                       if args.smoke else
+                       {"steps": 24, "outer_every": 8, "batch": 2,
+                        "seq": 64, "link_rtt_ms": 40.0, "topk_frac": 0.01})
     return {
         "throughput": ({"size_mb": size_mb},
                        lambda: throughput.run(size_mb)),
@@ -86,6 +91,8 @@ def build_suites(args) -> dict:
         "sharded": (sharded_cfg, lambda: sharded.run(**sharded_cfg)),
         "autotune": (autotune_cfg, lambda: autotune.run(**autotune_cfg)),
         "store": (store_cfg, lambda: store.run(**store_cfg)),
+        "collectives": (collectives_cfg,
+                        lambda: collectives.run(**collectives_cfg)),
     }
 
 
@@ -95,7 +102,8 @@ def main() -> None:
                 help="per-dataset size; 0.25 keeps the full suite ~10 min on CPU")
     ap.add_argument("--only", default=None,
                     help="throughput|ablation_decode|ablation_unit|ratios|"
-                         "roofline|batched|serving|device|sharded|autotune|store")
+                         "roofline|batched|serving|device|sharded|autotune|"
+                         "store|collectives")
     ap.add_argument("--all", action="store_true",
                     help="write one BENCH_<suite>.json per suite "
                          "(shared schema) into --out-dir")

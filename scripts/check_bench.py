@@ -45,8 +45,10 @@ DETERMINISTIC_RE = re.compile(
     r"^(ratio|symlen)/"
     r"|/(n_arrays|n_layers|n_requests|n_tenants|unique_blobs|ndev|groups"
     r"|total_MB|served_MB|weight_MB|compression_ratio|n_leaves|n_windows"
-    r"|comp_MB|over_budget|stream_fetches|pressure_evictions)$"
-    r"|launches_per_restore|host_transfers_per_iter|host_bytes_per_iter")
+    r"|comp_MB|over_budget|stream_fetches|pressure_evictions|n_pods"
+    r"|outer_every|syncs)$"
+    r"|launches_per_restore|host_transfers_per_iter|host_bytes_per_iter"
+    r"|wire_ratio|wire_MB")
 
 # Wall-clock-derived metrics, split by which direction is a regression.
 HIGHER_IS_BETTER_RE = re.compile(

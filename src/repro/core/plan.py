@@ -327,6 +327,56 @@ def _operand_cache_key(operands: Dict[str, Any]) -> tuple:
     return tuple(parts)
 
 
+def gather_member_tables(dev: Dict[str, Any], axis_name: str, *,
+                         codec: Optional[str] = None,
+                         shared: Sequence[str] = (),
+                         row_counts=None) -> Dict[str, Any]:
+    """Collective-plane stage: all-gather per-member chunk tables into ONE
+    fused table, inside ``shard_map``.
+
+    Each mesh member holds a device-built wire table (the ``dev`` pytree a
+    :func:`dispatch` call consumes) describing its locally-encoded chunk
+    rows.  This gathers every per-chunk leaf over ``axis_name`` and
+    flattens the member axis into the chunk axis — member m's rows land at
+    ``[m*n_chunks, (m+1)*n_chunks)`` — so ONE dispatch decodes every
+    member's compressed bytes shard-locally after the all-gather moved only
+    wire bytes.  Shared tables (the codec's ``shared_extras``, e.g.
+    ``bitpack_bits``) and scalar operands replicate untouched: they are
+    identical across members by wire-format construction.
+
+    ``row_counts``: optional per-member scalar (int32) of VALID chunk rows
+    for *ragged* member tables — members that padded their table to a
+    common static height contribute ``row_counts`` real rows each; the
+    gathered table's padding rows get ``out_lens``/``comp_lens`` zeroed so
+    downstream masking (and length-honouring decode bodies) treat them as
+    absent.
+    """
+    import jax.numpy as jnp
+    from jax import lax
+
+    shared = set(shared)
+    if codec is not None:
+        from repro.core import registry
+        shared |= set(registry.get(codec).shared_extras)
+    n_chunks = dev["out_lens"].shape[0]
+    out = {}
+    for k, v in dev.items():
+        nd = getattr(v, "ndim", 0)
+        if k in shared or nd < 1 or v.shape[0] != n_chunks:
+            out[k] = v
+            continue
+        g = lax.all_gather(v, axis_name)              # (n_members, nc, ...)
+        out[k] = g.reshape((-1,) + tuple(v.shape[1:]))
+    if row_counts is not None:
+        counts = lax.all_gather(row_counts, axis_name).reshape(-1)
+        n_members = counts.shape[0]
+        flat = jnp.arange(n_members * n_chunks, dtype=jnp.int32)
+        valid = (flat % n_chunks) < counts[flat // n_chunks]
+        out["out_lens"] = jnp.where(valid, out["out_lens"], 0)
+        out["comp_lens"] = jnp.where(valid, out["comp_lens"], 0)
+    return out
+
+
 # --------------------------------------------------------------------------
 # the IR
 # --------------------------------------------------------------------------

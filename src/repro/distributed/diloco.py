@@ -8,25 +8,35 @@ inner steps, then pods reconcile with ONE compressed collective:
             (params carry a leading (n_pods,) axis sharded over 'pod';
             the inner step is vmapped over it, so no 'pod' collective
             is emitted at all)
-    outer:  delta = local - anchor per pod; int8-compressed all-reduce
-            (optim/grad_compress.compressed_psum) across 'pod'; anchor
-            updated with Nesterov momentum on the averaged delta (DiLoCo,
-            arXiv:2311.08105); all pods rebase onto the new anchor.
+    outer:  delta = local - anchor per pod; the delta tree crosses the
+            pod axis as registry-codec compressed bytes
+            (distributed/collectives.make_tree_reduce — int8 bitpack
+            wire or top-k values + 1-bit bitmap with error feedback),
+            decoded shard-locally through ``plan.dispatch`` with the
+            dequant→member-mean fused into the decode epilogue; the
+            Nesterov outer step (DiLoCo, arXiv:2311.08105) consumes the
+            decode output directly and all pods rebase onto the new
+            anchor.
+    overlap: ``OuterSyncPipeline`` double-buffers the sync — the
+            collective for window W runs concurrently with window W+1's
+            inner steps, and the delayed outer update is merged with a
+            streaming-DiLoCo-style correction
+            (merged = synced + (now - snapshot)).
 
-Wire cost per outer sync: params/4 bytes vs params*2*(H steps) for naive
-per-step bf16 grad sync — a ~8H x reduction on the inter-pod links
-(EXPERIMENTS.md §Perf quantifies this with the dry-run collective parser).
+Wire cost per outer sync: ~params/4 bytes (int8) or ~params/50 (top-k 1%)
+vs params*2*(H steps) for naive per-step bf16 grad sync;
+``collectives.wire_report`` computes the exact figures.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
+import time
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-
-from repro.optim import grad_compress
 
 
 @dataclasses.dataclass(frozen=True)
@@ -35,15 +45,26 @@ class DiLoCoConfig:
     outer_lr: float = 0.7
     outer_momentum: float = 0.9
     compress: bool = True
+    wire: str = "int8"          # "int8" | "topk" | "none" (compress=False)
+    topk_frac: float = 0.01
 
 
 def replicate_for_pods(tree, n_pods: int, mesh: Mesh = None):
-    """Add a leading (n_pods,) member axis to every leaf."""
+    """Add a leading (n_pods,) member axis to every leaf, placed over the
+    mesh 'pod' axis when ``mesh`` is given.
+
+    Works both eagerly (``device_put``) and under a jit trace
+    (``with_sharding_constraint``) — the outer sync calls this inside jit,
+    where a ``device_put`` placement would not stick.
+    """
     def rep(x):
         y = jnp.broadcast_to(x[None], (n_pods,) + x.shape)
         if mesh is not None:
-            y = jax.device_put(y, NamedSharding(
-                mesh, P(*("pod",) + (None,) * x.ndim)))
+            sh = NamedSharding(mesh, P(*("pod",) + (None,) * x.ndim))
+            if isinstance(y, jax.core.Tracer):
+                y = jax.lax.with_sharding_constraint(y, sh)
+            else:
+                y = jax.device_put(y, sh)
         return y
     return jax.tree.map(rep, tree)
 
@@ -54,25 +75,55 @@ def make_inner_step(train_step: Callable):
     return jax.vmap(train_step)
 
 
-def make_outer_sync(mesh: Mesh, cfg: DiLoCoConfig):
-    """Returns sync(pod_params, anchor, outer_mom) -> (pod_params, anchor,
-    outer_mom).  pod_params: leaves (n_pods, ...) sharded over 'pod';
-    anchor/outer_mom: plain replicated trees."""
-    n_pods = mesh.shape["pod"]
-    tree_cpsum = grad_compress.make_compressed_psum_fn(mesh, "pod")
+def init_outer_state(params, *, mesh: Mesh = None, cfg: DiLoCoConfig = None):
+    """Outer-loop state dict: ``anchor`` (the reference params every pod
+    rebases onto), f32 Nesterov ``outer_mom``, and — for the top-k wire —
+    per-pod error-feedback ``residual`` trees carrying the same leading
+    (n_pods,) axis as the pod params."""
+    cfg = cfg or DiLoCoConfig()
+    state = {
+        "anchor": jax.tree.map(lambda x: x, params),
+        "outer_mom": jax.tree.map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), params),
+        "residual": None,
+    }
+    if cfg.compress and cfg.wire == "topk":
+        if mesh is None:
+            raise ValueError("wire='topk' needs the mesh to place per-pod "
+                             "error-feedback residuals")
+        zeros = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32),
+                             params)
+        state["residual"] = replicate_for_pods(
+            zeros, int(mesh.shape["pod"]), mesh)
+    return state
 
-    def sync(pod_params, anchor, outer_mom):
+
+def make_outer_sync(mesh: Mesh, cfg: DiLoCoConfig, *, config=None):
+    """Returns sync(pod_params, outer) -> (pod_params, outer).
+
+    ``pod_params``: leaves (n_pods, ...) sharded over 'pod'; ``outer``: the
+    :func:`init_outer_state` dict.  The delta tree crosses the pod axis
+    through the compressed wire selected by ``cfg.wire`` and the averaged
+    delta is the decode output itself (dequant + member-mean fused into the
+    dispatch epilogue); the rebase threads ``mesh`` through
+    :func:`replicate_for_pods` so the new pod replicas keep their 'pod'
+    NamedSharding.
+    """
+    from repro.distributed import collectives
+
+    n_pods = int(mesh.shape["pod"])
+    wire = cfg.wire if cfg.compress else "none"
+    reduce_fn = collectives.make_tree_reduce(
+        mesh, "pod", wire=wire, frac=cfg.topk_frac, config=config)
+
+    def sync(pod_params, outer):
+        anchor, outer_mom = outer["anchor"], outer["outer_mom"]
         # per-pod delta from the anchor
-        deltas = jax.tree.map(lambda p, a: p - a[None].astype(p.dtype),
-                              pod_params, anchor)
-        if cfg.compress:
-            summed = tree_cpsum(deltas)       # int8 wire across pods
-        else:
-            summed = jax.tree.map(
-                lambda d: jnp.broadcast_to(jnp.sum(d, 0, keepdims=True),
-                                           d.shape), deltas)
-        avg = jax.tree.map(lambda s: s[0].astype(jnp.float32) / n_pods, summed)
-        # Nesterov outer step on the averaged delta
+        deltas = jax.tree.map(
+            lambda p, a: (p - a[None].astype(p.dtype)).astype(jnp.float32),
+            pod_params, anchor)
+        avg, new_res = reduce_fn(deltas, outer.get("residual"))
+        # Nesterov outer step directly on the decode output
         new_mom = jax.tree.map(
             lambda m, g: cfg.outer_momentum * m + g, outer_mom, avg)
         new_anchor = jax.tree.map(
@@ -80,13 +131,112 @@ def make_outer_sync(mesh: Mesh, cfg: DiLoCoConfig):
                              + cfg.outer_lr * (cfg.outer_momentum * m + g)
                              ).astype(a.dtype),
             anchor, new_mom, avg)
-        new_pod_params = replicate_for_pods(new_anchor, n_pods)
-        return new_pod_params, new_anchor, new_mom
+        new_pod_params = replicate_for_pods(new_anchor, n_pods, mesh)
+        new_outer = {"anchor": new_anchor, "outer_mom": new_mom,
+                     "residual": new_res}
+        return new_pod_params, new_outer
 
     return sync
 
 
-def init_outer_state(params):
-    anchor = jax.tree.map(lambda x: x, params)
-    outer_mom = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
-    return anchor, outer_mom
+class OuterSyncPipeline:
+    """Overlap the outer-sync collective with the next window's inner steps.
+
+    Double-buffered sync state, the same prefetch-overlap discipline as
+    ``core.store.stream_windows``: ``launch(pod_params, outer)`` snapshots
+    the pod params and dispatches the (async) sync; the caller keeps
+    running inner steps on the UN-synced params; ``finish(pod_params_now)``
+    blocks only for whatever collective time the inner window didn't
+    already hide and merges the delayed update streaming-DiLoCo style:
+
+        merged = synced_params + (pod_params_now - snapshot)
+
+    so inner progress made during the overlap window is preserved on top
+    of the rebased anchor.
+
+    ``link_rtt_s`` injects a deterministic inter-pod link round-trip into
+    the completion signal (same injected-latency discipline as the blob
+    store's backend ``read_delay``), making overlap measurable on CPU CI:
+    ``stats()['overlap_frac'] = 1 - wait/collective``.
+    """
+
+    def __init__(self, sync_fn: Callable, *, link_rtt_s: float = 0.0):
+        self.sync_fn = sync_fn
+        self.link_rtt_s = link_rtt_s
+        self._pending = None
+        self.syncs = 0
+        self.collective_s = 0.0
+        self.wait_s = 0.0
+
+    def launch(self, pod_params, outer) -> None:
+        if self._pending is not None:
+            raise RuntimeError("outer sync already in flight "
+                               "(finish() or abandon() it first)")
+        t0 = time.perf_counter()
+        new_pod_params, new_outer = self.sync_fn(pod_params, outer)
+        done = threading.Event()
+        box = {"done_at": None}
+
+        def waiter():
+            jax.block_until_ready(
+                (new_pod_params, new_outer["anchor"]))
+            if self.link_rtt_s:
+                time.sleep(self.link_rtt_s)
+            box["done_at"] = time.perf_counter()
+            done.set()
+
+        th = threading.Thread(target=waiter, daemon=True)
+        th.start()
+        self._pending = (pod_params, new_pod_params, new_outer,
+                         done, box, t0)
+
+    @property
+    def in_flight(self) -> bool:
+        return self._pending is not None
+
+    def finish(self, pod_params_now=None):
+        """Block for the remaining collective time and return
+        ``(merged_pod_params, new_outer)``.  With ``pod_params_now`` the
+        delayed update is corrected for inner progress made during the
+        overlap; without it the synced params are returned as-is."""
+        if self._pending is None:
+            raise RuntimeError("no outer sync in flight")
+        snapshot, new_pod_params, new_outer, done, box, t0 = self._pending
+        self._pending = None
+        w0 = time.perf_counter()
+        done.wait()
+        self.wait_s += time.perf_counter() - w0
+        self.collective_s += box["done_at"] - t0
+        self.syncs += 1
+        if pod_params_now is not None:
+            new_pod_params = jax.tree.map(
+                lambda synced, now, snap:
+                    (synced.astype(jnp.float32)
+                     + (now.astype(jnp.float32) - snap.astype(jnp.float32))
+                     ).astype(synced.dtype),
+                new_pod_params, pod_params_now, snapshot)
+        return new_pod_params, new_outer
+
+    def drain(self) -> None:
+        """Wait out any in-flight sync without consuming its result — the
+        fault path calls this so checkpoint restore can proceed while the
+        pending collective completes in its waiter thread."""
+        if self._pending is None:
+            return
+        _, _, _, done, box, t0 = self._pending
+        self._pending = None
+        w0 = time.perf_counter()
+        done.wait()
+        self.wait_s += time.perf_counter() - w0
+        self.collective_s += box["done_at"] - t0
+
+    def abandon(self) -> None:
+        """Drop the in-flight sync immediately (its waiter thread finishes
+        in the background); used when a failure invalidates the window."""
+        self._pending = None
+
+    def stats(self) -> dict:
+        frac = (1.0 - self.wait_s / self.collective_s
+                if self.collective_s > 0 else 0.0)
+        return {"syncs": self.syncs, "collective_s": self.collective_s,
+                "wait_s": self.wait_s, "overlap_frac": max(0.0, frac)}

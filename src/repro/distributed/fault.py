@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import statistics
+import threading
 import time
 from typing import Callable, List, Optional
 
@@ -87,13 +88,23 @@ class FaultTolerantRunner:
     ``total_steps``, checkpointing every ``ckpt_every``; on WorkerFailure it
     restores the latest checkpoint (optionally onto a new mesh via
     ``reshard_fn``) and continues.  ``max_restarts`` bounds the retry loop.
+
+    ``ckpt_codec`` selects a registry codec for checkpoint payloads
+    (restore then decodes through the batched DecodePlan path), and
+    ``sync_pipeline`` — a ``diloco.OuterSyncPipeline`` — lets an in-flight
+    compressed outer sync DRAIN concurrently with the compressed restore:
+    on failure the pending collective is released to finish in its waiter
+    thread while ``checkpoint.restore`` decodes, and joined only after the
+    restored state is live (restore + drain share one device budget
+    instead of serializing).
     """
 
     def __init__(self, step_fn: Callable, ckpt_dir: str, ckpt_every: int = 10,
                  monitor: Optional[StepMonitor] = None,
                  injector: Optional[FailureInjector] = None,
                  reshard_fn: Optional[Callable] = None,
-                 max_restarts: int = 3, async_ckpt: bool = True):
+                 max_restarts: int = 3, async_ckpt: bool = True,
+                 ckpt_codec: str = "none", sync_pipeline=None):
         self.step_fn = step_fn
         self.ckpt_dir = ckpt_dir
         self.ckpt_every = ckpt_every
@@ -102,6 +113,8 @@ class FaultTolerantRunner:
         self.reshard_fn = reshard_fn
         self.max_restarts = max_restarts
         self.async_ckpt = async_ckpt
+        self.ckpt_codec = ckpt_codec
+        self.sync_pipeline = sync_pipeline
 
     def run(self, state, batches, total_steps: int) -> tuple:
         from repro.checkpoint import checkpoint as ckpt
@@ -129,6 +142,7 @@ class FaultTolerantRunner:
                     if pending is not None:
                         pending.join()
                     pending = ckpt.save(self.ckpt_dir, step, state,
+                                        codec=self.ckpt_codec,
                                         async_=self.async_ckpt)
             except WorkerFailure:
                 restarts += 1
@@ -137,8 +151,19 @@ class FaultTolerantRunner:
                 if pending is not None:
                     pending.join()
                     pending = None
+                # release any in-flight outer sync: its waiter thread keeps
+                # draining the collective WHILE restore decodes the
+                # compressed checkpoint below; joined after restore.
+                th = None
+                if (self.sync_pipeline is not None
+                        and self.sync_pipeline.in_flight):
+                    th = threading.Thread(target=self.sync_pipeline.drain,
+                                          daemon=True)
+                    th.start()
                 latest = ckpt.latest_step(self.ckpt_dir)
                 if latest is None:
+                    if th is not None:
+                        th.join()
                     step = 0  # no checkpoint yet: restart from scratch
                     continue
                 if self.reshard_fn is not None:
@@ -146,6 +171,8 @@ class FaultTolerantRunner:
                         ckpt.restore(self.ckpt_dir, latest, state))
                 else:
                     state = ckpt.restore(self.ckpt_dir, latest, state)
+                if th is not None:
+                    th.join()
                 step = latest
         if pending is not None:
             pending.join()

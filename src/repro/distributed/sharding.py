@@ -103,6 +103,15 @@ def decode_axis(mesh: Mesh) -> str:
     return mesh.axis_names[0]
 
 
+def member_sharding(mesh: Mesh, axis: str = "pod",
+                    ndim: int = 1) -> NamedSharding:
+    """NamedSharding for per-member trees on the collective plane: leading
+    member axis over ``axis`` (one replica slice per pod), trailing dims
+    replicated.  Used for DiLoCo pod-param replicas, error-feedback
+    residuals, and the gathered wire tables in tests."""
+    return NamedSharding(mesh, P(axis, *([None] * (ndim - 1))))
+
+
 def decode_out_sharding(mesh: Mesh, ndim: int = 1) -> NamedSharding:
     """NamedSharding placing a decoded array's leading dim over
     :func:`decode_axis` (trailing dims replicated) — the default *place*

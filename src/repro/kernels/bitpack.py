@@ -3,8 +3,10 @@
 The one codec in the suite with *no* sequential dependence: element i lives
 at bit i*bits, so every VPU lane unpacks independently with a funnel shift —
 the pure form of the paper's observation that writing is trivially parallel
-once positions are known.  Used for compressed gradients, int8/int4
-optimizer moments and quantized KV-cache (optim/grad_compress.py).
+once positions are known.  Used for int8/int4 optimizer moments and
+quantized KV-cache (optim/grad_compress.py), and as the wire format of the
+compressed collectives: distributed/collectives.py builds this exact blob
+layout *on device* so gradient syncs decode through the same kernel.
 
 Grid is (num_chunks, elems/TILE): the word row rides along whole (it is
 ~bits/32 the size of the output tile), the output is tiled (1, TILE) with

@@ -3,8 +3,8 @@
 Single pod: 16x16 = 256 chips, axes (data, model).
 Multi-pod:  2x16x16 = 512 chips, axes (pod, data, model) — the 'pod' axis is
 a second data-parallel axis whose collectives ride the slow inter-pod links
-(which is where the compressed all-reduce of optim/grad_compress.py earns
-its keep).
+(which is where the compressed collectives of distributed/collectives.py —
+registry-codec wire + fused dequant epilogues — earn their keep).
 
 Functions, not module constants: importing this module never touches jax
 device state (the dry-run must set XLA_FLAGS before first jax init).

@@ -85,6 +85,27 @@ def build_train_step(cfg: ArchConfig, opt_cfg: Optional[adamw.AdamWConfig] = Non
     return train_step
 
 
+def build_pod_inner_step(cfg: ArchConfig,
+                         opt_cfg: Optional[adamw.AdamWConfig] = None,
+                         remat: bool = True, grad_compressor=None,
+                         unroll: bool = False):
+    """DiLoCo inner step: the train step vmapped over a leading (n_pods,)
+    member axis (params/opt/batch all carry it, sharded over 'pod'), so
+    each pod trains independently with NO cross-pod collective per step —
+    pods reconcile only through the compressed outer sync
+    (``distributed.diloco.make_outer_sync``).
+
+    ``grad_compressor`` composes: pass
+    ``distributed.collectives.make_wire_compressor()`` to push every
+    inner-step gradient through the real int8 bitpack wire + DecodePlan
+    decode (the optimizer consumes decode outputs, not a host-side
+    dequant)."""
+    from repro.distributed import diloco
+    return diloco.make_inner_step(
+        build_train_step(cfg, opt_cfg, remat=remat,
+                         grad_compressor=grad_compressor, unroll=unroll))
+
+
 def abstract_train_state(cfg: ArchConfig,
                          opt_cfg: Optional[adamw.AdamWConfig] = None):
     opt_cfg = opt_cfg or adamw.AdamWConfig()

@@ -2,16 +2,28 @@
 
 Runs the real thing end-to-end at any scale the host provides:
   * reduced configs on 1 CPU device (CI / examples),
-  * the production mesh on a TPU slice (same code path, bigger mesh).
+  * the production mesh on a TPU slice (same code path, bigger mesh),
+  * DiLoCo multi-pod training on any device set divisible into pods
+    (8 virtual CPU devices in the CI smoke step).
 
     PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --preset tiny \
         --steps 50 --batch 4 --seq 128
 
+    # compressed multi-pod training: 2 pods, int8 wire, overlapped sync
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src python -m repro.launch.train --preset tiny --steps 32 \
+        --diloco 2 --outer-every 8 --grad-int8
+
 Integrates every substrate layer: CODAG-compressed token shards decoded on
-device (data/pipeline.py), AdamW (+ int8 moments), periodic atomic/async
+device (data/pipeline.py), optionally demand-paged through the tiered blob
+store (``--spill-dir``), AdamW (+ int8 moments), periodic atomic/async
 checkpoints with restart (checkpoint/), straggler monitoring and failure
-injection (distributed/fault.py), optional int8 gradient wire format
-(optim/grad_compress.py).
+injection (distributed/fault.py), and the compressed collective plane:
+``--grad-int8`` pushes gradients through the real int8 bitpack wire +
+DecodePlan decode (distributed/collectives.py), ``--diloco N`` trains N
+pods with registry-codec compressed outer syncs (``--topk`` switches the
+wire to top-k values + 1-bit bitmap) overlapped with the next window's
+inner steps.
 """
 from __future__ import annotations
 
@@ -20,6 +32,7 @@ import dataclasses
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch, reduced
@@ -27,10 +40,10 @@ from repro.data import pipeline
 from repro.distributed import fault
 from repro.launch import steps as steps_lib
 from repro.models import model
-from repro.optim import adamw, grad_compress
+from repro.optim import adamw
 
 
-def main() -> None:
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="olmo-1b")
     ap.add_argument("--preset", choices=("tiny", "small", "100m", "full"),
@@ -42,51 +55,135 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--codec", default="rle_v2")
+    ap.add_argument("--spill-dir", default=None,
+                    help="route token shards through the tiered blob store "
+                         "(disk-backed, demand-paged) instead of host RAM")
     ap.add_argument("--fail-at", type=int, nargs="*", default=[])
-    ap.add_argument("--grad-int8", action="store_true")
+    ap.add_argument("--grad-int8", action="store_true",
+                    help="push gradients through the int8 bitpack wire + "
+                         "DecodePlan decode (collectives.make_wire_compressor)")
     ap.add_argument("--compress-moments", action="store_true")
+    ap.add_argument("--diloco", type=int, default=0, metavar="N_PODS",
+                    help="train N pods DiLoCo-style (devices reshaped to "
+                         "(pod, data)); outer syncs move compressed bytes")
+    ap.add_argument("--outer-every", type=int, default=16,
+                    help="inner steps per DiLoCo outer sync window (H)")
+    ap.add_argument("--outer-wire", choices=("int8", "topk", "none"),
+                    default="int8",
+                    help="DiLoCo outer-sync wire format ('none' = "
+                         "uncompressed f32 psum baseline)")
+    ap.add_argument("--topk", type=float, default=0.0, metavar="FRAC",
+                    help="outer-sync wire: top-FRAC values + 1-bit bitmap "
+                         "with error feedback (implies --outer-wire topk)")
+    ap.add_argument("--link-rtt", type=float, default=0.0,
+                    help="injected inter-pod link RTT seconds, for "
+                         "measuring sync/compute overlap on CPU")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--compile-cache", nargs="?", const=True, default=None,
                     metavar="DIR",
                     help="persistent jit compilation cache (optional dir; "
                          "default dir when given bare)")
-    args = ap.parse_args()
+    return ap
 
-    if args.compile_cache:
-        from repro.core import tuning
-        path = tuning.enable_compile_cache(
-            None if args.compile_cache is True else args.compile_cache)
-        print(f"compile cache: {path}")
 
+def _resolve_cfg(args):
     base = get_arch(args.arch)
     if args.preset == "tiny":
-        cfg = reduced(base)
-    elif args.preset == "small":
-        cfg = reduced(base, n_layers=4, d_model=256, vocab=2048)
-    elif args.preset == "100m":
-        cfg = dataclasses.replace(
+        return reduced(base)
+    if args.preset == "small":
+        return reduced(base, n_layers=4, d_model=256, vocab=2048)
+    if args.preset == "100m":
+        return dataclasses.replace(
             reduced(base, n_layers=12, d_model=768, vocab=32768, d_ff=2304),
             dtype="float32")
-    else:
-        cfg = base
-    print(f"arch={cfg.name} preset={args.preset} "
-          f"params~{cfg.param_count()/1e6:.1f}M")
+    return base
 
-    # --- compressed data pipeline -----------------------------------------
+
+def _build_loader(args, cfg):
     corpus = pipeline.synthetic_corpus(
         max(args.batch * args.seq * 8, 1 << 18), cfg.vocab)
     store = pipeline.CompressedTokenStore.build(
-        corpus, cfg.vocab, codec=args.codec)
+        corpus, cfg.vocab, codec=args.codec, spill_dir=args.spill_dir)
     print(f"token store: {len(store.blobs)} shards, "
-          f"compression ratio {store.ratio:.3f} ({args.codec})")
-    loader = pipeline.CompressedLoader(store, args.batch, args.seq)
+          f"compression ratio {store.ratio:.3f} ({args.codec}"
+          f"{', spilled' if args.spill_dir else ''})")
+    return pipeline.CompressedLoader(store, args.batch, args.seq)
 
-    # --- state + step ------------------------------------------------------
+
+def _stack_batches(it, n_pods: int):
+    bs = [next(it) for _ in range(n_pods)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *bs)
+
+
+def _run_diloco(args, cfg, loader) -> dict:
+    """N-pod DiLoCo loop: vmapped inner steps, compressed outer syncs
+    overlapped with the next window (OuterSyncPipeline)."""
+    from jax.sharding import Mesh
+    from repro.distributed import collectives, diloco
+
+    ndev = len(jax.devices())
+    n_pods = args.diloco
+    if ndev % n_pods:
+        raise SystemExit(f"--diloco {n_pods} does not divide {ndev} devices")
+    mesh = Mesh(np.array(jax.devices()).reshape(n_pods, ndev // n_pods),
+                ("pod", "data"))
+    wire = "topk" if args.topk > 0 else args.outer_wire
+    dcfg = diloco.DiLoCoConfig(inner_steps=args.outer_every, wire=wire,
+                               compress=(wire != "none"),
+                               topk_frac=args.topk or 0.01)
     opt_cfg = adamw.AdamWConfig(lr=args.lr,
                                 compress_moments=args.compress_moments)
     params = model.init_params(cfg, jax.random.key(0))
     opt_state = adamw.init(params, opt_cfg)
-    compressor = grad_compress.quantize_grads if args.grad_int8 else None
+    compressor = (collectives.make_wire_compressor()
+                  if args.grad_int8 else None)
+    inner = jax.jit(steps_lib.build_pod_inner_step(
+        cfg, opt_cfg, grad_compressor=compressor))
+
+    pod_params = diloco.replicate_for_pods(params, n_pods, mesh)
+    pod_opt = diloco.replicate_for_pods(opt_state, n_pods, mesh)
+    outer = diloco.init_outer_state(params, mesh=mesh, cfg=dcfg)
+    sync = jax.jit(diloco.make_outer_sync(mesh, dcfg))
+    pipe = diloco.OuterSyncPipeline(sync, link_rtt_s=args.link_rtt)
+
+    it = iter(loader)
+    losses = []
+    t0 = time.time()
+    for step in range(args.steps):
+        if step and step % dcfg.inner_steps == 0:
+            # finish the PREVIOUS window's sync (its collective ran under
+            # this window's inner steps), then launch the next one.
+            if pipe.in_flight:
+                pod_params, outer = pipe.finish(pod_params)
+            pipe.launch(pod_params, outer)
+        batch = _stack_batches(it, n_pods)
+        pod_params, pod_opt, loss = inner(pod_params, pod_opt, batch)
+        losses.append(float(jnp.mean(loss)))
+        if args.log_every and (step + 1) % args.log_every == 0:
+            print(f"step {step+1}: loss={losses[-1]:.4f}")
+    if pipe.in_flight:
+        pod_params, outer = pipe.finish(pod_params)
+    dt = time.time() - t0
+
+    wire_rep = collectives.wire_report(params, n_pods, wire=wire,
+                                       frac=dcfg.topk_frac)
+    return {"losses": losses, "seconds": dt, "steps_done": args.steps,
+            "restarts": 0, "stragglers": 0,
+            "tokens_per_step": n_pods * args.batch * args.seq,
+            "overlap": pipe.stats(), "wire": wire_rep,
+            "n_pods": n_pods}
+
+
+def _run_single(args, cfg, loader) -> dict:
+    opt_cfg = adamw.AdamWConfig(lr=args.lr,
+                                compress_moments=args.compress_moments)
+    params = model.init_params(cfg, jax.random.key(0))
+    opt_state = adamw.init(params, opt_cfg)
+    if args.grad_int8:
+        from repro.distributed import collectives
+        compressor = collectives.make_wire_compressor()
+    else:
+        compressor = None
     raw_step = steps_lib.build_train_step(cfg, opt_cfg,
                                           grad_compressor=compressor)
     jit_step = jax.jit(raw_step, donate_argnums=(0, 1))
@@ -106,12 +203,45 @@ def main() -> None:
     (params, opt_state), report = runner.run(
         (params, opt_state), iter(loader), args.steps)
     dt = time.time() - t0
+    return {"losses": report.losses, "seconds": dt,
+            "steps_done": report.steps_done, "restarts": report.restarts,
+            "stragglers": report.stragglers,
+            "tokens_per_step": args.batch * args.seq}
 
-    losses = report.losses
-    tok_per_step = args.batch * args.seq
-    print(f"done: {report.steps_done} steps in {dt:.1f}s "
-          f"({tok_per_step * len(losses) / dt:.0f} tok/s), "
-          f"restarts={report.restarts} stragglers={report.stragglers}")
+
+def run_training(args) -> dict:
+    """Drive one training run; returns a metrics dict (losses, timings,
+    wire/overlap stats for DiLoCo runs).  Importable — the collectives
+    benchmark calls this in forced-device-count subprocesses."""
+    if args.compile_cache:
+        from repro.core import tuning
+        path = tuning.enable_compile_cache(
+            None if args.compile_cache is True else args.compile_cache)
+        print(f"compile cache: {path}")
+
+    cfg = _resolve_cfg(args)
+    print(f"arch={cfg.name} preset={args.preset} "
+          f"params~{cfg.param_count()/1e6:.1f}M")
+    loader = _build_loader(args, cfg)
+    if args.diloco:
+        return _run_diloco(args, cfg, loader)
+    return _run_single(args, cfg, loader)
+
+
+def main() -> None:
+    args = build_parser().parse_args()
+    m = run_training(args)
+    losses, dt = m["losses"], m["seconds"]
+    print(f"done: {m['steps_done']} steps in {dt:.1f}s "
+          f"({m['tokens_per_step'] * len(losses) / dt:.0f} tok/s), "
+          f"restarts={m['restarts']} stragglers={m['stragglers']}")
+    if "wire" in m:
+        w, o = m["wire"], m["overlap"]
+        print(f"outer wire: {w['wire_bytes']:.0f}B vs f32 ring "
+              f"{w['f32_ring_bytes']:.0f}B ({w['ratio']:.1f}x); "
+              f"overlap: {o['syncs']} syncs, "
+              f"hidden {o['overlap_frac']*100:.0f}% of "
+              f"{o['collective_s']:.2f}s collective")
     k = max(1, len(losses) // 10)
     print(f"loss: first10={np.mean(losses[:k]):.4f} "
           f"last10={np.mean(losses[-k:]):.4f}")

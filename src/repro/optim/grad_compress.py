@@ -5,20 +5,24 @@ applied to the collective plane.  Inter-pod links (DCI) are an order of
 magnitude slower than intra-pod ICI, so the bytes crossing them are the
 scarce resource.  Three tools:
 
-1. ``quantize_grads`` / stateless int8 wire format: per-block-128 scales,
-   quantize -> dequantize around the (GSPMD-inserted) all-reduce.  Used as
-   the `grad_compressor` hook in build_train_step; numerically faithful to
-   an int8 wire (values pass through the int8 grid), 4x fewer wire bytes
-   when the runtime collective is int8 (shard_map path below).
-2. ``compressed_psum`` (shard_map): an *actual* int8 collective — each
-   member quantizes, all-gathers int8+scales over the axis, dequantizes and
-   sums locally.  Wire bytes: n*B/4 vs f32 ring all-reduce's ~2B.
-3. ``topk_sparsify`` + error feedback: keep the top-k fraction by
-   magnitude, accumulate the residual locally (momentum-correct SGD-EF),
-   bitpack the index bitmap with the paper's bitpack codec for the wire.
+1. ``quantize_leaf`` / ``dequantize_leaf``: the int8 per-block-128 grid
+   every wire format in this repo shares (one quantization block == one
+   bitpack wire chunk, so per-block scales broadcast in decode epilogues).
+2. ``quantize_grads``: stateless quantize->dequantize pass used as the
+   `grad_compressor` hook in build_train_step — numerically faithful to an
+   int8 wire (values pass through the int8 grid) without moving bytes.
+3. ``topk_select`` / ``topk_sparsify`` + error feedback: keep EXACTLY the
+   top-k entries by magnitude (ties broken deterministically by index),
+   accumulate the residual locally (momentum-correct SGD-EF).
 
-DiLoCo-style outer sync (distributed/diloco.py) composes (2) across the
-'pod' axis every H inner steps.
+The collectives that actually move these formats live in
+``distributed/collectives.py``: the registry-codec wire encode, the
+all-gather of compressed bytes + chunk tables, and the receive path
+lowered through ``DecodePlan`` with fused dequant→reduce epilogues.  The
+seed-era ``compressed_psum`` here (plain int8 all-gather outside the plan
+IR) is kept as the reference implementation the compressed wire is tested
+against.  DiLoCo outer sync (distributed/diloco.py) composes the
+collective across the 'pod' axis every H inner steps.
 """
 from __future__ import annotations
 
@@ -112,23 +116,39 @@ def wire_bytes_compressed(nbytes: int, n: int) -> float:
 # ---------------------------------------------------------------------------
 
 
+def topk_select(flat: jnp.ndarray, k: int):
+    """Exactly-k magnitude selection over a flat vector.
+
+    Returns ``(mask, kept)`` where ``mask`` is boolean with EXACTLY k True
+    entries and ``kept = where(mask, flat, 0)``.  Ties are broken
+    deterministically by index (``lax.top_k`` is stable: equal magnitudes
+    keep the lower index), so the wire-bytes estimate ``topk_wire_bytes``
+    is exact even on tied inputs — e.g. already-quantized grads, where a
+    threshold test (``abs >= thresh``) can keep far more than k."""
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    mask = jnp.zeros(flat.shape, bool).at[idx].set(True)
+    return mask, jnp.where(mask, flat, 0.0)
+
+
 def topk_sparsify(g: jnp.ndarray, residual: jnp.ndarray, frac: float = 0.01):
-    """Keep top-`frac` entries of (g + residual) by magnitude.
+    """Keep exactly the top-`frac` entries of (g + residual) by magnitude.
 
     Returns (sparse_g, new_residual).  The surviving values + a bitpacked
     index mask are what crosses the wire (mask = 1 bit/elem via the
-    paper's bitpack codec; values = 32/16-bit each)."""
+    paper's bitpack codec; values = 32/16-bit each) — see
+    ``distributed.collectives.topk_psum`` for the actual collective."""
     acc = g.astype(jnp.float32) + residual
     k = max(1, int(acc.size * frac))
     flat = acc.reshape(-1)
-    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
-    mask = jnp.abs(flat) >= thresh
-    kept = jnp.where(mask, flat, 0.0)
+    mask, kept = topk_select(flat, k)
     new_residual = (flat - kept).reshape(acc.shape)
     return kept.reshape(acc.shape).astype(g.dtype), new_residual
 
 
 def topk_wire_bytes(size: int, frac: float) -> float:
-    """values (f16) + 1-bit bitpacked mask, per member."""
+    """values (f16) + 1-bit bitpacked mask, per member.
+
+    Exact: ``topk_select`` guarantees the mask carries exactly
+    ``max(1, int(size*frac))`` set bits."""
     k = max(1, int(size * frac))
     return k * 2.0 + size / 8.0
